@@ -1,0 +1,47 @@
+"""Fig. 5 — AP runtime of micro/macro/CNN functions vs precision M.
+
+Emits the runtime (cycles) of each Table I function on 1D / 2D / 2D-seg
+APs across M in {2..16}, the curves the paper plots in Fig. 5."""
+from __future__ import annotations
+
+from repro.apsim import costmodel as cm
+from repro.apsim.energy import SRAM
+
+FUNCS = ("add", "multiply", "reduce", "matmat", "relu", "maxpool", "avgpool")
+
+
+def rows():
+    L, S, K = 256, 4, 64
+    i, j, u = 8, 16, 8
+    for M in (2, 4, 8, 12, 16):
+        for mode in ("1d", "2d", "2dseg"):
+            yield dict(
+                M=M, mode=mode,
+                add=cm.rt_add(M, L, mode).cycles(SRAM),
+                multiply=cm.rt_multiply(M, M, L, mode).cycles(SRAM),
+                reduce=cm.rt_reduce(M, L, mode).cycles(SRAM),
+                matmat=cm.rt_matmat(i, j, u, M, M, mode).cycles(SRAM),
+                relu=cm.rt_relu(M, L, mode).cycles(SRAM),
+                maxpool=cm.rt_maxpool(M, S, K, mode).cycles(SRAM),
+                avgpool=cm.rt_avgpool(M, S, K, mode).cycles(SRAM),
+            )
+
+
+def main() -> int:
+    print("fig5: AP runtimes (cycles), L=256 S=4 K=64 gemm=8x16x8")
+    print("M,mode," + ",".join(FUNCS))
+    for r in rows():
+        print(f"{r['M']},{r['mode']}," +
+              ",".join(f"{r[f]:.0f}" for f in FUNCS))
+    # paper claim: multiplication dominates micro functions and scales ~M^2
+    m2 = cm.rt_multiply(2, 2, 256, "2d").cycles(SRAM)
+    m8 = cm.rt_multiply(8, 8, 256, "2d").cycles(SRAM)
+    ratio = m8 / m2
+    ok = 10 < ratio < 18          # ~(8/2)^2 = 16 with linear terms
+    print(f"check,multiply_scaling_8b_vs_2b,{ratio:.1f},"
+          f"{'OK' if ok else 'MISMATCH'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

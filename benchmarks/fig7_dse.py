@@ -1,0 +1,89 @@
+"""Fig. 7 — design-space exploration: energy / latency / GOPS/W/mm^2 vs
+average precision for AlexNet, VGG16, ResNet50 on IR and LR configs.
+
+Paper trends asserted:
+  (a) energy: VGG16 > ResNet50 > AlexNet; rises super-linearly with bits
+      (ResNet50 LR 2b->8b is ~10.5x in the paper);
+  (b) latency ~flat vs precision; LR >> IR (folding);
+  (c) GOPS/W/mm^2: LR > IR (IR area is enormous); decreasing in bits."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apsim.energy import SRAM
+from repro.apsim.mapper import IR_CONFIG, LR_CONFIG, simulate_network
+from repro.apsim.workloads import NETWORKS
+
+
+def sweep():
+    rows = []
+    rng = np.random.default_rng(0)
+    for net in ("alexnet", "vgg16", "resnet50"):
+        layers = NETWORKS[net]()
+        n_gemm = sum(1 for l in layers if l.kind in ("conv", "fc"))
+        for cfg in (LR_CONFIG, IR_CONFIG):
+            for avg_bits in (2, 4, 6, 8):
+                # several per-layer mixes with this average (paper: means
+                # across combinations of similar average precision)
+                metrics = []
+                for trial in range(3):
+                    if trial == 0:
+                        bits = [avg_bits] * n_gemm
+                    else:
+                        lo = max(2, avg_bits - 2)
+                        hi = min(8, avg_bits + 2)
+                        bits = rng.integers(lo, hi + 1, n_gemm)
+                        shift = avg_bits - float(np.mean(bits))
+                        bits = np.clip(np.round(bits + shift), 2, 8
+                                       ).astype(int).tolist()
+                    r = simulate_network(layers, cfg, SRAM, bits=bits,
+                                         network=net)
+                    metrics.append((r.energy_j, r.latency_s,
+                                    r.gops_per_w_per_mm2))
+                e, l, g = (float(np.mean([m[i] for m in metrics]))
+                           for i in range(3))
+                rows.append(dict(net=net, cfg=cfg.name, bits=avg_bits,
+                                 energy_j=e, latency_s=l, gopswmm2=g))
+    return rows
+
+
+def main() -> int:
+    rows = sweep()
+    print("fig7: DSE (SRAM), mean over per-layer mixes per avg precision")
+    print("net,config,avg_bits,energy_J,latency_s,GOPS_per_W_per_mm2")
+    for r in rows:
+        print(f"{r['net']},{r['cfg']},{r['bits']},{r['energy_j']:.4g},"
+              f"{r['latency_s']:.4g},{r['gopswmm2']:.4g}")
+
+    def get(net, cfg, bits, key):
+        return next(r[key] for r in rows
+                    if r["net"] == net and r["cfg"] == cfg
+                    and r["bits"] == bits)
+
+    checks = {
+        "energy_order_vgg_gt_rn50_gt_alex": (
+            get("vgg16", "LR", 8, "energy_j")
+            > get("resnet50", "LR", 8, "energy_j")
+            > get("alexnet", "LR", 8, "energy_j")),
+        "rn50_energy_scaling_2to8": 5.0 < (
+            get("resnet50", "LR", 8, "energy_j")
+            / get("resnet50", "LR", 2, "energy_j")) < 20.0,
+        "latency_flat_vs_bits": (
+            get("vgg16", "LR", 8, "latency_s")
+            / get("vgg16", "LR", 2, "latency_s")) < 1.6,
+        "lr_slower_than_ir": (
+            get("resnet50", "LR", 8, "latency_s")
+            > get("resnet50", "IR", 8, "latency_s")),
+        "lr_more_area_efficient": (
+            get("vgg16", "LR", 8, "gopswmm2")
+            > get("vgg16", "IR", 8, "gopswmm2")),
+    }
+    ok = True
+    for k, v in checks.items():
+        print(f"check,{k},{bool(v)}")
+        ok &= bool(v)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

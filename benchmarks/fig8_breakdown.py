@@ -1,0 +1,63 @@
+"""Fig. 8 — breakdowns: (a) energy by op class, (b) GEMM latency by phase.
+
+Paper claims asserted: GEMM (+pooling) dominates energy; within GEMM, the
+*reduction* phase (sequential row-pair adds) dominates latency — which is
+why end-to-end latency is nearly precision-independent (Fig. 7b)."""
+from __future__ import annotations
+
+from repro.apsim import costmodel as cm
+from repro.apsim.energy import SRAM
+from repro.apsim.mapper import LR_CONFIG, simulate_network
+from repro.apsim.workloads import NETWORKS
+
+
+def energy_breakdown(net: str, bits: int = 8):
+    layers = NETWORKS[net]()
+    rep = simulate_network(layers, LR_CONFIG, SRAM, bits=bits, network=net)
+    out = rep.breakdown()
+    total_e = sum(d["energy_j"] for d in out.values())
+    return {k: d["energy_j"] / total_e for k, d in out.items()}, rep
+
+
+def gemm_latency_breakdown(bits: int = 8):
+    """Multiply phase vs reduction phase vs io for a representative GEMM."""
+    i, j, u = 512, 4608, 196          # VGG16 conv-ish dims
+    opc = 1
+    mult = cm.Cost()
+    passes = 4 * bits * bits
+    mult.compares += passes
+    mult.writes += passes
+    red = cm.Cost()
+    seq = opc * (min(j, LR_CONFIG.cap_rows - 1) - 1)
+    red.compares += 4 * seq
+    red.writes += 4 * seq
+    io = cm.Cost()
+    io.writes += 2 * bits
+    io.reads += 2 * bits + 13
+    c = {"multiply": mult.cycles(SRAM), "reduce": red.cycles(SRAM),
+         "io": io.cycles(SRAM)}
+    tot = sum(c.values())
+    return {k: v / tot for k, v in c.items()}
+
+
+def main() -> int:
+    print("fig8a: energy fraction by op class (LR/SRAM/8b)")
+    ok = True
+    for net in ("alexnet", "vgg16", "resnet50"):
+        frac, _ = energy_breakdown(net)
+        gemm = frac.get("gemm", 0.0)
+        pool = frac.get("maxpool", 0.0) + frac.get("avgpool", 0.0)
+        line = ",".join(f"{k}:{v:.3f}" for k, v in sorted(frac.items()))
+        print(f"{net},{line}")
+        ok &= gemm + pool > 0.80          # paper: GEMM+pooling dominate
+    print("fig8b: GEMM latency fraction by phase (8b)")
+    lat = gemm_latency_breakdown()
+    for k, v in lat.items():
+        print(f"gemm_latency,{k},{v:.3f}")
+    ok &= lat["reduce"] > lat["multiply"]  # paper: reduction dominates
+    print(f"check,gemm_pool_dominate_and_reduce_bound,{ok}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+``python -m benchmarks.run [--skip-roofline]`` runs everything and exits
+non-zero if any paper-claim check fails."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    from benchmarks import (calibrate, fig5_runtimes, fig6_technology,
+                            fig7_dse, fig8_breakdown, roofline,
+                            table7_bitfluid, table8_sota)
+    mods = [
+        ("calibrate", calibrate),
+        ("fig5_runtimes", fig5_runtimes),
+        ("fig6_technology", fig6_technology),
+        ("fig7_dse", fig7_dse),
+        ("fig8_breakdown", fig8_breakdown),
+        ("table7_bitfluid", table7_bitfluid),
+        ("table8_sota", table8_sota),
+    ]
+    if "--skip-roofline" not in sys.argv:
+        mods.append(("roofline", roofline))
+    failed = []
+    for name, mod in mods:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            rc = mod.main()
+        except Exception as e:                      # noqa: BLE001
+            print(f"ERROR in {name}: {e!r}")
+            rc = 1
+        print(f"[{name}] rc={rc} ({time.time() - t0:.1f}s)")
+        if rc:
+            failed.append(name)
+    print(f"\n==== benchmarks summary: "
+          f"{len(mods) - len(failed)}/{len(mods)} passed "
+          f"{'FAILED: ' + ','.join(failed) if failed else ''} ====")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

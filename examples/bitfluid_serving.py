@@ -1,0 +1,55 @@
+"""Dynamic mixed-precision serving (paper §V.B): one compiled server,
+per-request latency budgets, precision resolved at runtime by the
+BudgetController with EDP predictions from the AP simulator.
+
+  PYTHONPATH=src python examples/bitfluid_serving.py
+"""
+import time
+
+import jax
+
+from repro import configs
+from repro.core import policy as pol
+from repro.data.pipeline import make_batch
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = configs.get_smoke("stablelm_12b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = lm.quantize_params(params, cfg)
+    n = lm.n_bit_slots(cfg)
+
+    # three registered configurations, as in Table VII; predicted
+    # latencies come from the hardware model (here: bit-proportional)
+    ctrl = pol.BudgetController(
+        configs={"int4": pol.fixed(4),
+                 "mixed": pol.per_layer([8, 4], name="mixed"),
+                 "int8": pol.fixed(8)},
+        predicted_latency_s={"int4": 0.5, "mixed": 0.75, "int8": 1.0},
+        n_layers=n)
+    eng = ServeEngine(cfg, qparams, max_len=128, controller=ctrl)
+
+    requests = [
+        ("relaxed batch (budget 2.0)", 2.0),
+        ("normal batch (budget 0.8)", 0.8),
+        ("tight batch (budget 0.4)", 0.4),
+    ]
+    for desc, budget in requests:
+        eng.set_budget(budget)
+        batch = {"tokens": make_batch(1, 7, 2, 16, cfg.vocab_size)["tokens"]}
+        t0 = time.time()
+        out = eng.generate(batch, steps=6)
+        wv, _ = eng.controller.resolve(eng.budget_s)
+        import numpy as np
+        print(f"{desc}: served at mean {float(np.mean(np.asarray(wv))):.1f} "
+              f"weight bits ({time.time() - t0:.2f}s wall) "
+              f"tokens={out[0].tolist()}")
+    print(f"\ncompiled once: prefill x{eng.stats.prefill_traces}, "
+          f"decode x{eng.stats.decode_traces} — budget changes never "
+          f"touch compiled code (the paper's zero-overhead bit fluidity).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""End-to-end training driver example: a ~100M-parameter qwen3-family LM
+on the synthetic pipeline with checkpointing + straggler watchdog.
+
+Defaults are CPU-friendly (a ~10M model, 60 steps, minutes); pass
+``--full`` for the ~100M/300-step configuration on real hardware:
+
+  PYTHONPATH=src python examples/train_lm.py [--full]
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 300 steps (hardware-sized)")
+    args, _ = ap.parse_known_args()
+    if args.full:
+        # ~100M params: 12L x d=768 (qwen3 family), seq 512
+        import repro.configs.qwen3_4b as q
+        cfgmod = q
+        cfgmod.SMOKE = q.FULL.with_(
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+            vocab_size=32000, head_dim=64, remat="none")
+        sys.argv = [sys.argv[0], "--arch", "qwen3_4b", "--smoke",
+                    "--steps", "300", "--batch", "16", "--seq", "512",
+                    "--ckpt-dir", "/tmp/repro_ckpt_full",
+                    "--wbits", "8", "--abits", "8"]
+    else:
+        sys.argv = [sys.argv[0], "--arch", "qwen3_4b", "--smoke",
+                    "--steps", "60", "--batch", "8", "--seq", "128",
+                    "--ckpt-dir", "/tmp/repro_ckpt",
+                    "--ckpt-every", "25",
+                    "--wbits", "8", "4", "--abits", "8"]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

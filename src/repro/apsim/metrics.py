@@ -1,0 +1,72 @@
+"""Derived metrics + the Table VIII peak-performance model.
+
+Peak throughput: all 19.66M CAP rows hold one MAC each; the bit-serial
+multiply + amortized vertical add complete in ``3M^2 + 11M`` cycles at 1 GHz
+(counting 2 ops per MAC).  This cycle polynomial reproduces the paper's
+published peaks EXACTLY for all three precisions:
+
+    M=1 : 14 cy   -> 2,808,686 GOPS   (paper: 2,808,686)
+    M=8 : 280 cy  ->   140,434 GOPS   (paper:   140,434)
+    M=16: 944 cy  ->    41,654 GOPS   (paper:    41,654)
+
+i.e. the paper's peak model is cycles(M) = 3M^2 + 11M — consistent with a
+LUT walk of 3 compare-dominated passes per bit pair plus ~11 linear-cost
+populate/readout passes per bit.  (Reverse-engineered; noted in
+EXPERIMENTS.md.)
+
+Peak power uses the same cell-energy accounting as the end-to-end simulator
+(multiply-phase compares dominate), so peak GOPS/W is a *prediction* — the
+paper does not state its power basis; deltas are reported.
+"""
+from __future__ import annotations
+
+from repro.apsim.energy import TechParams, SRAM
+from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, area_mm2
+
+
+def peak_cycles(M: int) -> float:
+    return 3.0 * M * M + 11.0 * M
+
+
+def peak_gops(M: int, cfg: BFIMNAConfig = LR_CONFIG) -> float:
+    ops = 2.0 * cfg.total_rows
+    return ops / peak_cycles(M) * (cfg.freq_hz / 1e9)
+
+
+def peak_energy_per_mac_j(M: int, tech: TechParams = SRAM) -> float:
+    """Paper peak-power basis: ONE compare-energy per bit-pair pass per
+    row — e_mac(M) = E_compare * (M^2 + M).
+
+    Reverse-engineered by fitting the paper's three published GOPS/W
+    points (22879@1b, 641@8b, 170@16b): the quadratic coefficient of the
+    fit, 4.31e-14 J, matches our independently Fig.6/7-calibrated
+    E_COMPARE_J = 4.59e-14 J within 6% — i.e. the paper's peak model
+    charges the multiply's M^2 bit-pair walk plus an M-linear add at one
+    compare-energy each, per resident MAC.  (The end-to-end simulator
+    keeps the full cell-level accounting; this basis is used only for the
+    Table VIII peaks, like the paper's 'peak values [40]'.)"""
+    cell_ops = float(M * M + M)
+    return cell_ops * tech.e_compare_j + 2.0 * M * tech.e_write_j
+
+
+def peak_gops_per_w(M: int, tech: TechParams = SRAM,
+                    cfg: BFIMNAConfig = LR_CONFIG) -> float:
+    ops_per_j = 2.0 / peak_energy_per_mac_j(M, tech)
+    return ops_per_j / 1e9
+
+
+PAPER_TABLE8 = {
+    # framework: (tech node, freq GHz, precision, GOPS, GOPS/W)
+    "H100 GPU": ("TSMC 4N", 1.83, 8, 1_979_000, 2827),
+    "TPUv4": ("7nm", 1.05, 8, 275_000, 1432),
+    "Valavi [43]": ("65nm", 0.1, 1, 18_876, 866_000),
+    "Sim [37]": ("65nm", 0.125, 16, 64, 1422),
+    "DaDianNao": ("32nm", 0.606, 16, 5584, 278),
+    "ISAAC": ("32nm-memristive", 1.2, 16, 40_907, 622),
+    "PipeLayer": ("50nm-memristive", None, 16, 122_706, 143),
+    "IMCA": ("65nm", 1.0, 8, 3, 4630),
+    "PUMA": ("32nm-memristive", 1.0, 16, 52_310, 840),
+    "BF-IMNA_1b (paper)": ("16nm", 1.0, 1, 2_808_686, 22_879),
+    "BF-IMNA_8b (paper)": ("16nm", 1.0, 8, 140_434, 641),
+    "BF-IMNA_16b (paper)": ("16nm", 1.0, 16, 41_654, 170),
+}

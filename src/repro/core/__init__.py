@@ -1,0 +1,7 @@
+"""repro.core — the paper's contribution as composable JAX modules.
+
+bitfluid   quant/dequant, bit planes, dyadic runtime requantization
+policy     per-layer precision policies (fixed / mixed / HAWQ-V3 / dynamic)
+emulator   functional AP (compare/write LUT passes, bit-exact validation)
+"""
+from repro.core import bitfluid, emulator, policy  # noqa: F401

@@ -1,0 +1,232 @@
+"""Functional AP emulator: word-parallel compare/write LUT passes on bits.
+
+The paper's §IV validates its runtime models with a Python emulation of
+the AP executing micro/macro/CNN functions.  This module is that
+emulation: data lives as {0,1} bit planes (two's-complement columns), and
+every operation is a sequence of *compare* (pattern match -> tag) and
+*write* (masked update of tagged rows) passes following the operation's
+LUT — the same mechanism as the hardware, so results are bit-exact by
+construction and the pass counts cross-validate Table I's cycle models
+(tests/test_emulator.py).
+
+LUTs implemented:
+  * in-place addition (4 passes/bit + carry column; Yantir [50] ordering
+    chosen so written patterns never re-match later passes)
+  * out-of-place multiplication (bit-serial shift-add: Mw x Ma pass walk)
+  * ReLU (Table III: one pass/bit against the sign flag)
+  * max (Table IV flags F1/F2: MSB-first winner resolution)
+  * reduction / average pooling (vertical-mode pairwise adds)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PassCounter:
+    compares: int = 0
+    writes: int = 0
+    reads: int = 0
+
+    def cycles(self) -> int:
+        return self.compares + self.writes + self.reads
+
+
+def to_bits(x: np.ndarray, M: int) -> np.ndarray:
+    """(L,) ints -> (L, M) two's-complement bit matrix, LSB first."""
+    x = np.asarray(x, np.int64)
+    u = x & ((1 << M) - 1)
+    return ((u[:, None] >> np.arange(M)[None, :]) & 1).astype(np.uint8)
+
+
+def from_bits(b: np.ndarray, signed: bool = True) -> np.ndarray:
+    M = b.shape[1]
+    v = (b.astype(np.int64) * (1 << np.arange(M))[None, :]).sum(1)
+    if signed:
+        v = np.where(b[:, -1] == 1, v - (1 << M), v)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Compare / write primitives (word-parallel across rows)
+# ---------------------------------------------------------------------------
+
+def _compare(cols, pattern, counter: PassCounter, select=None) -> np.ndarray:
+    """Tag rows whose selected column bits equal `pattern`."""
+    counter.compares += 1
+    tag = np.ones(cols[0].shape[0], bool)
+    for c, p in zip(cols, pattern):
+        tag &= c == p
+    if select is not None:
+        tag &= select
+    return tag
+
+
+def _write(cols, values, tag, counter: PassCounter) -> None:
+    counter.writes += 1
+    for c, v in zip(cols, values):
+        c[tag] = v
+
+
+# ---------------------------------------------------------------------------
+# Addition LUT (in-place A + B -> B, carry column Cr)
+# Pass order guarantees no written row re-matches a later pass.
+# ---------------------------------------------------------------------------
+
+_ADD_LUT = (  # (A, B, Cr) pattern  ->  (B', Cr')
+    ((0, 0, 1), (1, 0)),
+    ((0, 1, 1), (0, 1)),
+    ((1, 1, 0), (0, 1)),
+    ((1, 0, 0), (1, 0)),
+)
+
+
+def add_inplace(A: np.ndarray, B: np.ndarray, counter: PassCounter,
+                select=None) -> np.ndarray:
+    """B := A + B, bit-serial LSB->MSB.  A: (L, Ma), B: (L, Mb >= Ma+1)."""
+    L, Ma = A.shape
+    Cr = np.zeros(L, np.uint8)
+    for i in range(B.shape[1]):
+        a_col = A[:, i] if i < Ma else np.zeros(L, np.uint8)
+        b_col = B[:, i]
+        for pattern, (b_new, c_new) in _ADD_LUT:
+            tag = _compare((a_col, b_col, Cr), pattern, counter, select)
+            _write((b_col, Cr), (b_new, c_new), tag, counter)
+        B[:, i] = b_col
+    return B
+
+
+def multiply(A: np.ndarray, B: np.ndarray, counter: PassCounter
+             ) -> np.ndarray:
+    """C := A * B (unsigned), out of place; (L,Ma) x (L,Mb) -> (L,Ma+Mb).
+
+    Bit-serial shift-add: for each multiplier bit j, rows with B_j == 1
+    add (A << j) into C — the Mw x Ma LUT walk of Eq. 2."""
+    L, Ma = A.shape
+    Mb = B.shape[1]
+    C = np.zeros((L, Ma + Mb), np.uint8)
+    for j in range(Mb):
+        sel = _compare((B[:, j],), (1,), counter)
+        window = C[:, j:]
+        add_inplace(A, window, counter, select=sel)
+        C[:, j:] = window
+    return C
+
+
+def relu(V: np.ndarray, counter: PassCounter) -> np.ndarray:
+    """Table III: stash MSB in flag, reset it, zero bits where flag set."""
+    L, M = V.shape
+    F = V[:, -1].copy()
+    counter.reads += 1
+    _write((V[:, -1],), (0,), np.ones(L, bool), counter)
+    counter.writes += 1                     # flag column write
+    for i in range(M - 1):
+        col = V[:, i]
+        tag = _compare((col, F), (1, 1), counter)
+        _write((col,), (0,), tag, counter)
+        V[:, i] = col
+    return V
+
+
+def maximum_inplace(A: np.ndarray, B: np.ndarray, counter: PassCounter
+                    ) -> np.ndarray:
+    """B := max(A, B) (unsigned), MSB-first with Table IV's F1/F2 flags.
+
+    F2 = comparison decided; F1 = B is the winner.  Per bit (4 LUT
+    passes): undecided rows resolve on the first differing bit; rows
+    decided for A copy A's remaining bits into B."""
+    L, M = A.shape
+    F1 = np.zeros(L, np.uint8)              # decided, B wins
+    F2 = np.zeros(L, np.uint8)              # decided
+    for i in range(M - 1, -1, -1):
+        a_col, b_col = A[:, i], B[:, i].copy()
+        # 1st pass: A=1,B=0, undecided -> A wins, copy bit
+        tag = _compare((a_col, b_col, F2), (1, 0, 0), counter)
+        _write((b_col, F2), (1, 0), tag, counter)
+        decided_a = tag
+        # 2nd pass: A=0,B=1, undecided -> B wins
+        tag = _compare((a_col, b_col, F2), (0, 1, 0), counter)
+        _write((F1, F2), (1, 1), tag, counter)
+        # mark rows decided for A (F2=1, F1=0) — done after pass 2 so the
+        # pass-2 compare can't see them
+        F2[decided_a] = 1
+        # 3rd/4th passes: decided-for-A rows copy A's bit into B
+        sel = (F2 == 1) & (F1 == 0)
+        tag = _compare((a_col,), (1,), counter, select=sel & ~decided_a)
+        _write((b_col,), (1,), tag, counter)
+        tag = _compare((a_col,), (0,), counter, select=sel & ~decided_a)
+        _write((b_col,), (0,), tag, counter)
+        B[:, i] = b_col
+    return B
+
+
+def reduce_sum(A: np.ndarray, M_out: int, counter: PassCounter) -> int:
+    """Vertical-mode reduction: pairwise in-place adds (Eq. 4 structure)."""
+    vals = [A[i:i + 1] for i in range(A.shape[0])]
+    width = A.shape[1]
+    while len(vals) > 1:
+        nxt = []
+        for i in range(0, len(vals) - 1, 2):
+            a = np.pad(vals[i], ((0, 0), (0, M_out - vals[i].shape[1])))
+            b = np.pad(vals[i + 1], ((0, 0), (0, M_out - vals[i + 1].shape[1])))
+            nxt.append(add_inplace(a, b, counter))
+        if len(vals) % 2:
+            nxt.append(np.pad(vals[-1],
+                              ((0, 0), (0, M_out - vals[-1].shape[1]))))
+        vals = nxt
+    counter.reads += 1
+    return int(from_bits(vals[0], signed=False)[0])
+
+
+# ---------------------------------------------------------------------------
+# Word-level convenience wrappers (the emulator's public API)
+# ---------------------------------------------------------------------------
+
+def ap_add(a: np.ndarray, b: np.ndarray, M: int):
+    """Returns (a + b mod 2^(M+1), PassCounter)."""
+    c = PassCounter()
+    A = to_bits(a, M)
+    B = np.pad(to_bits(b, M), ((0, 0), (0, 1)))
+    out = add_inplace(A, B, c)
+    return from_bits(out, signed=False), c
+
+
+def ap_multiply(a: np.ndarray, b: np.ndarray, M: int):
+    c = PassCounter()
+    out = multiply(to_bits(a, M), to_bits(b, M), c)
+    return from_bits(out, signed=False), c
+
+
+def ap_relu(v: np.ndarray, M: int):
+    c = PassCounter()
+    out = relu(to_bits(v, M), c)
+    return from_bits(out, signed=False), c
+
+
+def ap_max(a: np.ndarray, b: np.ndarray, M: int):
+    c = PassCounter()
+    out = maximum_inplace(to_bits(a, M), to_bits(b, M), c)
+    return from_bits(out, signed=False), c
+
+
+def ap_reduce(a: np.ndarray, M: int):
+    c = PassCounter()
+    L = len(a)
+    M_out = M + max(int(np.ceil(np.log2(max(L, 2)))), 1)
+    return reduce_sum(to_bits(a, M), M_out, c), c
+
+
+def ap_matmul(X: np.ndarray, W: np.ndarray, M: int):
+    """Full GEMM on the emulator: X (i,j) @ W (j,u), unsigned M-bit inputs."""
+    c = PassCounter()
+    i, j = X.shape
+    _, u = W.shape
+    out = np.zeros((i, u), np.int64)
+    for r in range(i):
+        for col in range(u):
+            prod = multiply(to_bits(X[r], M), to_bits(W[:, col], M), c)
+            M_out = 2 * M + max(int(np.ceil(np.log2(max(j, 2)))), 1)
+            out[r, col] = reduce_sum(prod, M_out, c)
+    return out, c

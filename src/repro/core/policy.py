@@ -1,0 +1,119 @@
+"""Precision policies — who gets how many bits, statically or at runtime.
+
+A :class:`PrecisionPolicy` resolves to two per-layer integer vectors
+(weight bits, activation bits) that flow through the model as *data*
+(scan xs), so switching configurations never recompiles — the TPU analogue
+of BF-IMNA's zero-overhead dynamic mixed-precision.
+
+Built-ins:
+  * ``fixed(b)``                      — the paper's fixed-precision baseline.
+  * ``per_layer([...])``              — arbitrary static mixed-precision.
+  * ``hawq_v3(constraint)``           — the paper's Table VII ResNet18 study
+                                        (INT4/INT8 mixes for low/medium/high
+                                        latency budgets, from HAWQ-V3 [53]).
+  * ``BudgetController``              — dynamic: picks among registered
+                                        configurations at runtime from a
+                                        latency/EDP budget signal (paper §V.B
+                                        "switching between the three
+                                        mixed-precision configurations
+                                        dynamically").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.apsim.workloads import HAWQV3_RESNET18, HAWQV3_METADATA  # noqa: F401
+
+FP_BITS = 16  # sentinel: >=16 means "leave in bf16/f32" (fake_quant identity)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-layer (weight, activation) bit assignment for an n_layers stack."""
+    name: str
+    weight_bits: Tuple[int, ...]
+    act_bits: Tuple[int, ...]
+
+    def vectors(self, n_layers: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Materialize (wbits, abits) int32 vectors of length n_layers.
+
+        Shorter tables extend with their last entry (paper Table VII rule).
+        """
+        def expand(tab: Sequence[int]) -> jnp.ndarray:
+            vals = [tab[i] if i < len(tab) else tab[-1] for i in range(n_layers)]
+            return jnp.asarray(vals, jnp.int32)
+        return expand(self.weight_bits), expand(self.act_bits)
+
+    @property
+    def avg_bits(self) -> float:
+        return sum(self.weight_bits) / len(self.weight_bits)
+
+
+def fixed(bits: int, name: Optional[str] = None) -> PrecisionPolicy:
+    return PrecisionPolicy(name or f"int{bits}", (bits,), (bits,))
+
+
+def full_precision() -> PrecisionPolicy:
+    return PrecisionPolicy("fp", (FP_BITS,), (FP_BITS,))
+
+
+def per_layer(weight_bits: Sequence[int],
+              act_bits: Optional[Sequence[int]] = None,
+              name: str = "mixed") -> PrecisionPolicy:
+    ab = tuple(act_bits) if act_bits is not None else tuple(weight_bits)
+    return PrecisionPolicy(name, tuple(weight_bits), ab)
+
+
+def hawq_v3(constraint: str) -> PrecisionPolicy:
+    """Paper Table VII: HAWQ-V3 ResNet18 mixes; constraint in
+    {int4, low, medium, high, int8} (weight and activation share bits)."""
+    tab = HAWQV3_RESNET18[constraint]
+    return per_layer(tab, name=f"hawqv3-{constraint}")
+
+
+# ---------------------------------------------------------------------------
+# Dynamic switching (run-time bit fluidity)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BudgetController:
+    """Chooses a registered precision configuration from a runtime budget.
+
+    The chosen config is returned as *arrays*, so the switch is pure data —
+    a serving binary compiled once switches per request batch.  Selection
+    rule (paper §V.B): tightest-latency config whose predicted latency fits
+    the budget; if none fit, the fastest config wins.
+    """
+    configs: Dict[str, PrecisionPolicy]
+    predicted_latency_s: Dict[str, float]
+    n_layers: int
+
+    def order(self):
+        return sorted(self.configs, key=lambda k: self.predicted_latency_s[k])
+
+    def stacked_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(n_configs, n_layers) bit tables, fastest config first."""
+        ws, as_ = [], []
+        for k in self.order():
+            w, a = self.configs[k].vectors(self.n_layers)
+            ws.append(w)
+            as_.append(a)
+        return jnp.stack(ws), jnp.stack(as_)
+
+    def select(self, budget_s) -> jnp.ndarray:
+        """Runtime index into stacked_tables() given a latency budget scalar."""
+        lats = jnp.asarray([self.predicted_latency_s[k] for k in self.order()],
+                           jnp.float32)
+        fits = lats <= jnp.asarray(budget_s, jnp.float32)
+        # last (slowest/most accurate) fitting config, else index 0 (fastest)
+        idx = jnp.where(jnp.any(fits), jnp.max(jnp.where(
+            fits, jnp.arange(lats.shape[0]), -1)), 0)
+        return idx.astype(jnp.int32)
+
+    def resolve(self, budget_s) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        wtab, atab = self.stacked_tables()
+        idx = self.select(budget_s)
+        return wtab[idx], atab[idx]

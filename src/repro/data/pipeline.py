@@ -1,0 +1,88 @@
+"""Deterministic synthetic data pipeline with per-host sharding + prefetch.
+
+``batch = f(seed, step)`` is a *pure function* — restarting after a crash
+or re-issuing a straggler's shard replays identical data with no iterator
+state to checkpoint (only the step number, which lives in the optimizer
+state).  Each host materializes only its slice (``host_slice``); a
+background thread keeps a small prefetch queue ahead of the training loop.
+
+The synthetic stream is a mixture of Zipf-distributed tokens and short
+repeated motifs, so models show a real (falling) loss curve in the
+examples without any dataset dependency.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_batch(seed: int, step: int, batch: int, seq_len: int,
+               vocab: int, cfg=None) -> dict:
+    """Pure (seed, step) -> batch.  Adds modality-stub inputs per family."""
+    rng = np.random.default_rng(np.uint64(seed) + np.uint64(step) * 1000003)
+    # Zipf body + motif repetitions (gives n-gram structure to learn)
+    body = rng.zipf(1.3, size=(batch, seq_len)).astype(np.int64) % vocab
+    motif_len = 16
+    motif = rng.integers(0, vocab, (batch, motif_len))
+    reps = seq_len // (4 * motif_len)
+    for r in range(reps):
+        at = (r * 4 + 1) * motif_len
+        body[:, at:at + motif_len] = motif
+    out = {"tokens": jnp.asarray(body, jnp.int32)}
+    if cfg is not None and cfg.family == "vlm":
+        out["prefix"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg is not None and cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, max(seq_len // cfg.frames_ratio, 1),
+                                 cfg.d_model)), jnp.bfloat16)
+    return out
+
+
+def host_slice(global_batch: int) -> slice:
+    """This host's batch rows (data-parallel across processes)."""
+    per = global_batch // max(jax.process_count(), 1)
+    i = jax.process_index()
+    return slice(i * per, (i + 1) * per)
+
+
+class SyntheticLM:
+    """Prefetching iterator over make_batch(seed, step)."""
+
+    def __init__(self, seed: int, batch: int, seq_len: int, vocab: int,
+                 cfg=None, start_step: int = 0, prefetch: int = 2):
+        self.seed, self.batch, self.seq_len, self.vocab = seed, batch, seq_len, vocab
+        self.cfg = cfg
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self) -> None:
+        s = self.step
+        while not self._stop.is_set():
+            b = make_batch(self.seed, s, self.batch, self.seq_len,
+                           self.vocab, self.cfg)
+            try:
+                self._q.put((s, b), timeout=1.0)
+                s += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        s, b = self._q.get()
+        self.step = s + 1
+        return s, b
+
+    def close(self) -> None:
+        self._stop.set()

@@ -1,0 +1,88 @@
+"""Bit-plane GEMM — the AP's bit-serial multiply rebuilt for the MXU.
+
+BF-IMNA multiplies by walking ``Mw x Ma`` bit pairs through a compare/write
+LUT (cost O(M^2), Table I).  The TPU's MXU is a fixed 8-bit-or-wider
+systolic array, so the faithful *algorithmic* analogue walks the weight's
+bit planes and issues one int8 matmul per plane:
+
+    y = x_q @ w_q = sum_{j < Mw} 2^j * (x_q @ plane_j)        (sign plane
+      carries weight -2^(Mw-1), two's complement)
+
+* ``n_planes`` is a **static** specialization (dispatch-cached in ops.py) —
+  lowering a 4-bit layer issues 4 plane matmuls, a 2-bit layer 2: compute
+  cost scales linearly with assigned weight bits, the MXU analogue of the
+  AP's "MSBs deactivated" energy scaling.
+* Activation bits are absorbed by the MXU's native 8-bit path; activation
+  fluidity is dyadic requantization (core/bitfluid.requant_shift), applied
+  before the kernel.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost; an int32 VMEM scratch
+accumulates across K steps; plane extraction happens on the VMEM-resident
+weight tile, so HBM traffic is the int8 container once — planes are never
+materialized in HBM.  MXU-aligned blocks (multiples of 128 on M/N, 128+ on
+K) are enforced by ops.py padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_planes: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                    # (bm, bk) int8
+    w = w_ref[...].astype(jnp.int32)                  # (bk, bn) int8 container
+    field = w & ((1 << n_planes) - 1)                 # low-Mw two's-compl field
+
+    acc = acc_ref[...]
+    for j in range(n_planes):                         # the bit-serial walk
+        plane = ((field >> j) & 1).astype(jnp.int8)
+        d = jax.lax.dot_general(
+            x, plane,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        weight = -(1 << (n_planes - 1)) if j == n_planes - 1 else (1 << j)
+        acc = acc + weight * d
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_planes", "bm", "bn", "bk",
+                                             "interpret"))
+def bitplane_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, *, n_planes: int = 8,
+                    bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """(M, K) int8 @ (K, N) int8-container -> (M, N) int32, plane-serial.
+
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert 1 <= n_planes <= 8
+    k_steps = K // bk
+
+    grid = (M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_planes=n_planes, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q)

@@ -1,0 +1,111 @@
+"""Flash attention Pallas kernel — the prefill compute hot spot.
+
+Blockwise online-softmax attention with explicit VMEM tiling: the scores
+tile (bq x bk) lives only in VMEM/registers, HBM traffic is O(S·hd) per
+head instead of O(S²).  Grid (batch*heads, Sq/bq, Sk/bk), K innermost;
+running max / normalizer / accumulator persist in VMEM scratch across the
+K walk.  Causal + sliding-window masks derive from tile coordinates with
+iota — nothing S² ever materializes.
+
+The pure-JAX blockwise path (models/transformer._flash_sdpa) is the
+lowering used inside the big models (XLA fuses it adequately and it
+composes with SPMD); this kernel is the single-core TPU-optimal version
+for the (B·H, S, hd) hot loop, validated against ref.flash_attention_ref
+in interpret mode.  MXU alignment: bq/bk multiples of 128, hd padded by
+ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, k_len: int, bq: int,
+            bk: int, nk: int):
+    i = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, hd)
+    k = k_ref[0]                                   # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    vis = kpos < k_len                             # padded key slots
+    if causal:
+        vis &= kpos <= qpos
+    if window:
+        vis &= kpos > qpos - window
+    s = jnp.where(vis, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(vis, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v_ref.dtype), v_ref[0],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "k_len",
+                                             "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, k_len: int = 0,
+                    scale: float = 0.0, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """(BH, Sq, hd) x (BH, Sk, hd)^2 -> (BH, Sq, hd), softmax(qk^T/√hd)v.
+
+    Sq/Sk must be multiples of bq/bk (ops.py pads; ``k_len`` masks padded
+    key slots; ``scale`` defaults to padded-hd^-0.5 — pass the real one
+    when hd was padded)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = scale or hd ** -0.5
+    k_len = k_len or Sk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, k_len=k_len, bq=bq, bk=bk, nk=nk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,147 @@
+"""Public kernel API: padding, dispatch (Pallas-TPU vs XLA ref), caching.
+
+``use_pallas()`` is True only on real TPU backends; elsewhere (this CPU
+container, and inside the 512-device dry-run) the mathematically identical
+ref path lowers through XLA, so compiled-artifact analysis reflects the
+same algorithm.  Kernel *numerics* are validated against ref in
+tests/test_kernels.py with interpret=True.
+
+Per-precision specializations are cached by (n_planes, block shape) via
+jit's static-arg cache: switching a layer between 2/4/8 bits after warmup
+costs no recompilation — the dispatch-cache realization of bit fluidity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitfluid as bf
+from repro.kernels import ref as kref
+from repro.kernels.bitplane_matmul import bitplane_matmul as _bitplane_pallas
+from repro.kernels.quant_matmul import quant_matmul as _quant_pallas
+from repro.kernels.int4_matmul import int4_matmul as _int4_pallas
+
+_FORCE: Optional[bool] = None  # tests set this to route through interpret
+
+
+def set_force_pallas(v: Optional[bool]) -> None:
+    global _FORCE
+    _FORCE = v
+
+
+def use_pallas() -> bool:
+    if _FORCE is not None:
+        return _FORCE
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def _blocks_for(M: int, N: int, K: int):
+    """MXU-aligned blocks; small dims shrink to avoid wasteful padding."""
+    bm = 128 if M >= 128 else max(8, 1 << (max(M - 1, 1)).bit_length())
+    return min(bm, 128), 128, 128
+
+
+# ---------------------------------------------------------------------------
+
+def bitplane_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, *, n_planes: int = 8,
+                    interpret: bool = False) -> jnp.ndarray:
+    """int8 (M,K) @ int8-container (K,N) -> int32 (M,N), plane-serial."""
+    if not (use_pallas() or interpret):
+        return kref.bitplane_matmul_ref(x_q, w_q, n_planes)
+    M, K = x_q.shape
+    N = w_q.shape[1]
+    bm, bn, bk = _blocks_for(M, N, K)
+    xp = _pad_to(x_q, (bm, bk))
+    wp = _pad_to(w_q, (bk, bn))
+    out = _bitplane_pallas(xp, wp, n_planes=n_planes, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret)
+    return out[:M, :N]
+
+
+def quant_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray,
+                 bias: Optional[jnp.ndarray] = None, *, act: str = "none",
+                 out_dtype=jnp.float32, interpret: bool = False) -> jnp.ndarray:
+    """int8 (M,K) @ int8 (K,N) with fused per-channel dequant epilogue."""
+    M, K = x_q.shape
+    N = w_q.shape[1]
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (1, N))
+    bias = (jnp.zeros((1, N), jnp.float32) if bias is None
+            else jnp.broadcast_to(jnp.asarray(bias, jnp.float32), (1, N)))
+    if not (use_pallas() or interpret):
+        return kref.quant_matmul_ref(x_q, w_q, scale, bias, act, out_dtype)
+    bm, bn, bk = _blocks_for(M, N, K)
+    xp = _pad_to(x_q, (bm, bk))
+    wp = _pad_to(w_q, (bk, bn))
+    sp = _pad_to(scale, (1, bn))
+    bp = _pad_to(bias, (1, bn))
+    out = _quant_pallas(xp, wp, sp, bp, act=act, out_dtype=out_dtype,
+                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]
+
+
+def int4_matmul(x_q: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray,
+                *, out_dtype=jnp.float32, interpret: bool = False) -> jnp.ndarray:
+    """int8 (M,K) @ halves-packed uint8 (K,N/2) with fused dequant."""
+    M, K = x_q.shape
+    N = 2 * w_packed.shape[1]
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (1, N))
+    if not (use_pallas() or interpret):
+        return kref.int4_matmul_ref(x_q, w_packed, scale, out_dtype)
+    bm, bn, bk = _blocks_for(M, N, K)
+    # padding packed columns pads both halves consistently only when no pad
+    # is needed; require alignment instead (model dims are 128-multiples).
+    assert K % bk == 0 and (N // 2) % bn == 0, (K, N)
+    xp = _pad_to(x_q, (bm, bk))
+    out = _int4_pallas(xp, w_packed, scale, out_dtype=out_dtype,
+                       bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end fluid linear: quantize activations, walk planes, dequantize.
+# ---------------------------------------------------------------------------
+
+def fluid_linear(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
+                 *, wbits: int = 8, abits: int = 8,
+                 interpret: bool = False) -> jnp.ndarray:
+    """float (..., K) @ int8-container (K, N): the bit-fluid serving matmul.
+
+    Static ``wbits`` routes through the plane-serial kernel (cost ∝ wbits);
+    use core.bitfluid.fluid_int8_matmul for traced (runtime-tensor) bits.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_scale = bf.symmetric_scale(x2, abits)
+    x_q = bf.quantize(x2, x_scale, abits)
+    acc = bitplane_matmul(x_q, w_q, n_planes=wbits, interpret=interpret)
+    y = acc.astype(jnp.float32) * x_scale * jnp.asarray(w_scale, jnp.float32)
+    return y.reshape(*lead, -1)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Flat-head flash attention: (BH, Sq, hd). Pads Sq/Sk/hd to tiles."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    if not (use_pallas() or interpret):
+        return kref.flash_attention_ref(q, k, v, causal, window)
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(128, max(8, 1 << (Sq - 1).bit_length())) if Sq < 128 else 128
+    bk = min(128, max(8, 1 << (Sk - 1).bit_length())) if Sk < 128 else 128
+    qp = _pad_to(q, (1, bq, 128))
+    kp = _pad_to(k, (1, bk, 128))
+    vp = _pad_to(v, (1, bk, 128))
+    out = _fa(qp, kp, vp, causal=causal, window=window, k_len=Sk,
+              scale=hd ** -0.5, bq=bq, bk=bk, interpret=interpret)
+    return out[:, :Sq, :hd]

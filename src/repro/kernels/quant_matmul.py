@@ -1,0 +1,78 @@
+"""Fused int8 GEMM + dequant (+bias, +activation) — the fixed-precision path.
+
+One MXU int8 matmul per tile with the dequantization epilogue fused in VMEM:
+
+    y = act( (x_q @ w_q) * scale[n] + bias[n] )
+
+``scale`` folds the per-tensor activation scale into the per-channel weight
+scale outside the kernel (ops.py), so the epilogue is one multiply.  This is
+the throughput ceiling the bit-plane kernel is measured against: a b-bit
+layer costs b/8 of this kernel's MXU work via the plane walk, and exactly
+this kernel's work via the requant-shift path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "gelu": jax.nn.gelu,
+}
+
+
+def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *,
+            k_steps: int, act: str, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        y = acc_ref[...].astype(jnp.float32) * s_ref[...]
+        y = y + b_ref[...]
+        o_ref[...] = _ACTS[act](y).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "out_dtype", "bm", "bn",
+                                             "bk", "interpret"))
+def quant_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray,
+                 bias: jnp.ndarray, *, act: str = "none",
+                 out_dtype=jnp.float32, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """(M,K) int8 @ (K,N) int8 -> (M,N) out_dtype with fused epilogue.
+
+    scale, bias: (1, N) float32 (broadcast rows), per output channel.
+    """
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2 and scale.shape == (1, N) and bias.shape == (1, N)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    k_steps = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, act=act,
+                          out_dtype=out_dtype),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, scale, bias)

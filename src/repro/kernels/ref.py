@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every kernel — the correctness ground truth.
+
+Each ``*_ref`` mirrors its kernel's contract exactly (same dtypes, same
+rounding, same scale semantics) with no Pallas, so tests can
+``assert_allclose`` across shape/dtype sweeps, and the dry-run lowers the
+same math through XLA when Pallas-TPU is unavailable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitfluid as bf
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "gelu": jax.nn.gelu,
+}
+
+
+def _int8_dot(x_q, w_q):
+    return jax.lax.dot_general(
+        x_q, w_q, dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def bitplane_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                        n_planes: int = 8) -> jnp.ndarray:
+    """Plane-serial accumulate; identical numerics to the kernel (int32)."""
+    field = w_q.astype(jnp.int32) & ((1 << n_planes) - 1)
+    acc = jnp.zeros((x_q.shape[0], w_q.shape[1]), jnp.int32)
+    for j in range(n_planes):
+        plane = ((field >> j) & 1).astype(jnp.int8)
+        weight = -(1 << (n_planes - 1)) if j == n_planes - 1 else (1 << j)
+        acc = acc + weight * _int8_dot(x_q, plane)
+    return acc
+
+
+def quant_matmul_ref(x_q, w_q, scale, bias, act: str = "none",
+                     out_dtype=jnp.float32):
+    y = _int8_dot(x_q, w_q).astype(jnp.float32) * scale + bias
+    return _ACTS[act](y).astype(out_dtype)
+
+
+def int4_matmul_ref(x_q, w_packed, scale, out_dtype=jnp.float32):
+    w = bf.unpack_int4_halves(w_packed)
+    return (_int8_dot(x_q, w).astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """(BH, Sq, hd) softmax attention oracle (f32 math)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    Sq, Sk = s.shape[1], s.shape[2]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    vis = jnp.ones((Sq, Sk), bool)
+    if causal:
+        vis &= kpos <= qpos
+    if window:
+        vis &= kpos > qpos - window
+    s = jnp.where(vis[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the batch pytree for the given
+(architecture x input-shape) cell; ``abstract_params`` / ``abstract_opt`` /
+``abstract_cache`` eval_shape the parameter/optimizer/cache pytrees.  These
+drive both the dry-run lowering and the roofline accounting.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        toks = SDS((B, S + 1), jnp.int32)      # model trains on exactly S
+        out = {"tokens": toks}
+        if cfg.family == "vlm":
+            out["tokens"] = SDS((B, S + 1 - cfg.n_prefix_tokens), jnp.int32)
+            out["prefix"] = SDS((B, cfg.n_prefix_tokens, cfg.d_model),
+                                jnp.bfloat16)
+        elif cfg.family == "encdec":
+            out["frames"] = SDS((B, S // cfg.frames_ratio, cfg.d_model),
+                                jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["tokens"] = SDS((B, S - cfg.n_prefix_tokens), jnp.int32)
+            out["prefix"] = SDS((B, cfg.n_prefix_tokens, cfg.d_model),
+                                jnp.bfloat16)
+        elif cfg.family == "encdec":
+            out["frames"] = SDS((B, S // cfg.frames_ratio, cfg.d_model),
+                                jnp.bfloat16)
+        return out
+    # decode: one new token against an S-deep cache
+    return {"tok": SDS((B, 1), jnp.int32), "t": SDS((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k), key)
+
+
+def abstract_qparams(cfg: ModelConfig, container: str = "int8"):
+    p = abstract_params(cfg)
+    return jax.eval_shape(lambda q: lm.quantize_params(q, cfg, container), p)
+
+
+def abstract_opt(cfg: ModelConfig, ocfg: AdamWConfig):
+    p = abstract_params(cfg)
+    return jax.eval_shape(lambda q: adamw_init(q, ocfg), p)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: lm.empty_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def bit_vectors(cfg: ModelConfig, bits: int = 8):
+    n = lm.n_bit_slots(cfg)
+    v = jnp.full((n,), bits, jnp.int32)
+    return v, v
+
+
+def optimizer_for(cfg: ModelConfig) -> AdamWConfig:
+    """Memory posture scales with model size (DESIGN.md §5): the 1T MoE
+    uses int8 first moments + factored second moments."""
+    if cfg.n_experts >= 256 or cfg.d_model >= 8192:
+        return AdamWConfig(m_dtype="int8", v_mode="factored")
+    return AdamWConfig(m_dtype="float32", v_mode="full")

@@ -1,0 +1,6 @@
+"""Model zoo: every assigned architecture family + the paper's CNNs.
+
+All GEMMs route through the bit-fluid linear (models/common.apply_linear):
+training uses fake-quant STE at per-layer runtime bits; serving uses int8/
+int4 containers with dyadic runtime requantization (core/bitfluid).
+"""

@@ -1,0 +1,174 @@
+"""The paper's CNN workloads in JAX: conv-as-GEMM (im2col) through the
+bit-fluid linear — AlexNet / VGG16 / ResNet18 / ResNet50.
+
+Faithful to BF-IMNA's mapping (§II.C): every convolution lowers to
+``im2col`` patches x kernel matrix, executed by the same quantized linear
+as the LM stacks, so HAWQ-V3's per-layer bit vectors drive these networks
+identically (Table VII reproduction runs ResNet18 through this path).
+
+Shapes are NHWC; reduced image sizes are fine (examples use CIFAR-sized
+inputs) — layer structure, not ImageNet resolution, is what the paper's
+study needs on CPU.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.apsim.workloads import Layer, NETWORKS
+from repro.models import common as cm
+
+
+def im2col(x: jnp.ndarray, hk: int, wk: int, stride: int, pad: int
+           ) -> jnp.ndarray:
+    """NHWC -> (N, Ho, Wo, hk*wk*C) patches (the paper's P matrix rows)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (hk, wk), (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields channel-major (C*hk*wk) features;
+    # reorder to (hk*wk, C) so weights reshape naturally
+    N, Ho, Wo, F = patches.shape
+    C = x.shape[-1]
+    p = patches.reshape(N, Ho, Wo, C, hk * wk)
+    return jnp.moveaxis(p, 3, 4).reshape(N, Ho, Wo, hk * wk * C)
+
+
+def conv_gemm(p: dict, x: jnp.ndarray, layer: Layer, wbits=8, abits=8
+              ) -> jnp.ndarray:
+    """x: (N, H, W, Cin) -> (N, Ho, Wo, Cout) via patches @ W."""
+    g = layer.groups
+    cols = im2col(x, layer.hk, layer.wk, layer.stride, layer.pad)
+    if g == 1:
+        y = cm.apply_linear(p, cols, wbits, abits)
+    else:
+        N, Ho, Wo, F = cols.shape
+        cin_g = x.shape[-1] // g
+        fk = layer.hk * layer.wk * cin_g
+        cols_g = cols.reshape(N, Ho, Wo, g, fk)
+        w = p["w"].reshape(fk, g, layer.cout // g)
+        ys = [cm.apply_linear({"w": w[:, i]}, cols_g[:, :, :, i], wbits, abits)
+              for i in range(g)]
+        y = jnp.concatenate(ys, axis=-1)
+        if "b" in p:
+            y = y + p["b"]
+    if layer.relu:
+        y = jax.nn.relu(y.astype(jnp.float32)).astype(cm.DTYPE)
+    return y
+
+
+def pool2d(x: jnp.ndarray, layer: Layer) -> jnp.ndarray:
+    k, s = layer.hk, layer.stride
+    if layer.kind == "maxpool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf if x.dtype == jnp.float32 else jnp.finfo(x.dtype).min,
+            jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+    summed = jax.lax.reduce_window(
+        x.astype(jnp.float32), 0.0, jax.lax.add, (1, k, k, 1),
+        (1, s, s, 1), "VALID")
+    return (summed / (k * k)).astype(x.dtype)
+
+
+def init_cnn(network: str, key, num_classes: int = 1000,
+             image: int = 0) -> Tuple[dict, List[Layer]]:
+    """Build params for a paper workload table (optionally rescaled to a
+    smaller input image; FC input dims follow the actual spatial size)."""
+    layers = NETWORKS[network]()
+    if image:
+        scale = image / layers[0].hin
+        layers = _rescale(layers, image)
+    params: dict = {}
+    keys = jax.random.split(key, len(layers))
+    x_hw, x_c = layers[0].hin, layers[0].cin
+    for i, l in enumerate(layers):
+        if l.kind == "conv":
+            fk = l.hk * l.wk * (l.cin // l.groups)
+            # grouped convs store w as (fk, cout) and reshape (fk, g,
+            # cout/g) at apply time; bias is always full (cout,)
+            params[l.name] = cm.dense_init(keys[i], fk, l.cout, bias=True)
+        elif l.kind == "fc":
+            params[l.name] = cm.dense_init(keys[i], l.cin, l.cout, bias=True)
+    return params, layers
+
+
+def _rescale(layers: List[Layer], image: int) -> List[Layer]:
+    """Shrink spatial dims; keeps channel structure (for CPU examples).
+
+    Residual ``*_down`` convs read the BLOCK input (the height at the
+    previous ``add``), not the main path's current height."""
+    import dataclasses as dc
+    out = []
+    h = image
+    h_block = image
+    for l in layers:
+        if l.kind == "conv" and l.name.endswith("_down"):
+            hk = min(l.hk, h_block)
+            out.append(dc.replace(l, hin=h_block, win=h_block, hk=hk, wk=hk))
+        elif l.kind in ("conv", "maxpool", "avgpool"):
+            hk = min(l.hk, h)
+            nl = dc.replace(l, hin=h, win=h, hk=hk, wk=hk,
+                            window=hk * hk if l.kind != "conv" else l.window)
+            h = nl.hout
+            out.append(nl)
+            if l.kind != "conv":
+                h_block = h
+        elif l.kind == "add":
+            out.append(dc.replace(l, hin=h, win=h))
+            h_block = h
+        elif l.kind == "fc" and out and out[-1].kind in ("conv", "maxpool",
+                                                         "avgpool", "add"):
+            prev_c = _last_channels(out)
+            nl = dc.replace(l, cin=prev_c * h * h)
+            out.append(nl)
+            h = 1
+        else:
+            out.append(l)
+    return out
+
+
+def _last_channels(layers: List[Layer]) -> int:
+    for l in reversed(layers):
+        if l.kind == "conv":
+            return l.cout
+        if l.kind in ("maxpool", "avgpool", "add"):
+            return l.cin
+    raise ValueError
+
+
+def cnn_forward(params: dict, x: jnp.ndarray, layers: List[Layer],
+                wvec=None, avec=None) -> jnp.ndarray:
+    """End-to-end inference; wvec/avec: per-GEMM-layer bit arrays (the
+    HAWQ-V3 Table VII vectors) or None for fp."""
+    gi = 0
+    residual: Optional[jnp.ndarray] = None
+    block_in: Optional[jnp.ndarray] = None
+    x = x.astype(cm.DTYPE)
+    for l in layers:
+        wb = int(wvec[min(gi, len(wvec) - 1)]) if wvec is not None else 16
+        ab = int(avec[min(gi, len(avec) - 1)]) if avec is not None else 16
+        if l.kind == "conv":
+            if block_in is None:
+                block_in = x
+            if l.name.endswith("_down"):
+                residual = conv_gemm(params[l.name], block_in, l, wb, ab)
+                gi += 1
+                continue
+            x = conv_gemm(params[l.name], x, l, wb, ab)
+            gi += 1
+        elif l.kind in ("maxpool", "avgpool"):
+            x = pool2d(x, l)
+        elif l.kind == "add":
+            skip = residual if residual is not None else block_in
+            if skip is not None and skip.shape == x.shape:
+                x = x + skip
+            x = jax.nn.relu(x.astype(jnp.float32)).astype(cm.DTYPE)
+            residual, block_in = None, None
+        elif l.kind == "fc":
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = cm.apply_linear(params[l.name], x, wb, ab)
+            if l.relu:
+                x = jax.nn.relu(x.astype(jnp.float32)).astype(cm.DTYPE)
+            gi += 1
+    return x.astype(jnp.float32)

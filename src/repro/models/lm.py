@@ -1,0 +1,331 @@
+"""LM wiring: embeddings, per-family stacks, loss, prefill/decode, and the
+train/serve parameter forms.
+
+Public API (all pure functions):
+  init_params(cfg, key)                      -> train-form pytree (bf16)
+  quantize_params(params, cfg, container)    -> serve-form (int8/int4 + scales)
+  train_loss(params, batch, cfg, wvec, avec) -> (loss, metrics)
+  prefill(params, batch, cfg, wvec, avec, cache) -> (last_logits, cache)
+  decode_step(params, tok, t, cache, cfg, wvec, avec) -> (logits, cache)
+  empty_cache(cfg, batch, max_len)           -> family-specific cache pytree
+
+``wvec``/``avec`` are per-layer bit vectors (runtime tensors — core/policy);
+per-family semantics documented in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.models import common as cm
+from repro.models import encdec, hybrid, mamba2, moe, transformer as tf
+from repro.models.config import ModelConfig
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def n_bit_slots(cfg: ModelConfig) -> int:
+    """Length of the per-layer bit vectors for this family."""
+    if cfg.family == "encdec":
+        return cfg.n_enc_layers + cfg.n_layers
+    if cfg.family == "hybrid":
+        return hybrid.n_super(cfg)
+    return cfg.n_layers
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    p = {"emb": (jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(cm.DTYPE),
+         "ln_f": cm.norm_init(cfg.d_model, cfg.norm_type)}
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = jax.vmap(lambda k: tf.block_init(k, cfg))(
+            jax.random.split(k_layers, cfg.n_layers))
+    elif cfg.family == "moe":
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            blk = tf.block_init(k1, cfg)
+            del blk["mlp"]
+            blk["mlp"] = moe.moe_init(k2, cfg)
+            return blk
+        p["layers"] = jax.vmap(one)(jax.random.split(k_layers, cfg.n_layers))
+    elif cfg.family == "ssm":
+        p["layers"] = jax.vmap(lambda k: mamba2.mamba_init(k, cfg))(
+            jax.random.split(k_layers, cfg.n_layers))
+    elif cfg.family == "hybrid":
+        p["layers"] = hybrid.hybrid_init(k_layers, cfg)
+    elif cfg.family == "encdec":
+        p["layers"] = encdec.encdec_init(k_layers, cfg)
+    else:
+        raise ValueError(cfg.family)
+    if not cfg.tie_embeddings:
+        p["head"] = cm.dense_init(k_head, cfg.d_model, cfg.padded_vocab,
+                                  scale=cfg.d_model ** -0.5)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Serve-form quantization (rule-based traversal)
+# ---------------------------------------------------------------------------
+
+_EXPERT_KEYS = ("wg", "wu", "wd")
+_FP_SUBTREES = ("router", "lora")        # precision-sensitive: keep bf16
+_SKIP_ARRAYS = ("emb",)                  # gather tables stay bf16
+
+
+def quantize_params(params: dict, cfg: ModelConfig,
+                    container: str = "int8") -> dict:
+    """Train-form -> serve-form.  Every linear {"w": (..., K, N)} becomes
+    {"q"/"q4", "s"} (per-out-channel scales, stacked dims preserved);
+    MoE expert stacks (E, d, f) quantize per expert."""
+    import repro.core.bitfluid as bf
+
+    def q_linear(p: dict) -> dict:
+        w = p["w"].astype(jnp.float32)
+        out = {}
+        if container == "int4":
+            s = bf.symmetric_scale(w, 4, axis=-2)
+            out["q4"] = bf.pack_int4_halves(bf.quantize(w, s, 4))
+        else:
+            s = bf.symmetric_scale(w, 8, axis=-2)
+            out["q"] = bf.quantize(w, s, 8)
+        out["s"] = s
+        if "b" in p:
+            out["b"] = p["b"]
+        return out
+
+    def q_expert(w: jnp.ndarray) -> dict:
+        w = w.astype(jnp.float32)
+        s = bf.symmetric_scale(w, 8, axis=-2)
+        return {"q": bf.quantize(w, s, 8), "s": s}
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            if "w" in node and path[-1] not in _FP_SUBTREES:
+                return q_linear(node)
+            out = {}
+            for k, v in node.items():
+                if k in _FP_SUBTREES:
+                    out[k] = v
+                elif (k in _EXPERT_KEYS and not isinstance(v, dict)
+                        and getattr(v, "ndim", 0) == 3):
+                    out[k] = q_expert(v)
+                else:
+                    out[k] = rec(v, path + (k,))
+            return out
+        return node
+
+    return rec(params, ("",))
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _dense_stack(layers, x, cfg, wvec, avec, positions, cache=None, t=None,
+                 mlp_fn=None):
+    def body(carry, scanned):
+        x = carry
+        if cache is not None:
+            lp, wb, ab, cl = scanned
+        else:
+            lp, wb, ab = scanned
+            cl = None
+        x, new_cl, aux = tf.block(lp, x, cfg, wb, ab, positions=positions,
+                                  cache=cl, t=t, mlp_fn=mlp_fn)
+        x = dist.constrain(x, ("dp", None, None))
+        return x, ((new_cl, aux) if cache is not None else aux)
+
+    if cfg.remat == "full" and cache is None:
+        body = jax.checkpoint(body)
+    xs = (layers, wvec, avec) + ((cache,) if cache is not None else ())
+    x, ys = jax.lax.scan(body, x, xs)
+    if cache is not None:
+        new_cache, aux = ys
+        return x, new_cache, jnp.mean(aux)
+    return x, None, jnp.mean(ys)
+
+
+def _ssm_stack(layers, x, cfg, wvec, avec, cache=None):
+    def body(carry, scanned):
+        x = carry
+        if cache is not None:
+            lp, wb, ab, conv, ssm = scanned
+            st = {"conv": conv, "ssm": ssm}
+        else:
+            lp, wb, ab = scanned
+            st = None
+        x, new_st = mamba2.mamba_block(lp, x, cfg, wb, ab, state=st)
+        x = dist.constrain(x, ("dp", None, None))
+        return x, ((new_st["conv"], new_st["ssm"]) if cache is not None else ())
+
+    if cfg.remat == "full" and cache is None:
+        body = jax.checkpoint(body)
+    xs = (layers, wvec, avec)
+    if cache is not None:
+        xs = xs + (cache["conv"], cache["ssm"])
+    x, ys = jax.lax.scan(body, x, xs)
+    if cache is not None:
+        return x, {"conv": ys[0], "ssm": ys[1]}, jnp.zeros((), jnp.float32)
+    return x, None, jnp.zeros((), jnp.float32)
+
+
+def forward_hidden(params, x, cfg: ModelConfig, wvec, avec, *, positions,
+                   cache=None, t=None, enc_out=None):
+    """Embedded inputs -> final hidden states.  Returns (h, cache, aux)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return _dense_stack(params["layers"], x, cfg, wvec, avec, positions,
+                            cache, t)
+    if fam == "moe":
+        return _dense_stack(params["layers"], x, cfg, wvec, avec, positions,
+                            cache, t, mlp_fn=moe.apply_moe)
+    if fam == "ssm":
+        return _ssm_stack(params["layers"], x, cfg, wvec, avec, cache)
+    if fam == "hybrid":
+        h, new_cache = hybrid.hybrid_forward(
+            params["layers"], x, cfg, wvec, avec, positions=positions,
+            cache=cache, t=t)
+        return h, new_cache, jnp.zeros((), jnp.float32)
+    if fam == "encdec":
+        kv_cache = cache["self"] if cache is not None else None
+        if cache is not None and "cross" in cache:
+            xkv = cache["cross"]
+        else:
+            xkv = encdec.cross_kv(params["layers"]["dec"], enc_out, cfg,
+                                  wvec[-cfg.n_layers:], avec[-cfg.n_layers:])
+        h, new_self = encdec.decoder_forward(
+            params["layers"], x, cfg, wvec, avec, positions=positions,
+            enc_kv=xkv, cache=kv_cache, t=t)
+        new_cache = ({"self": new_self, "cross": xkv}
+                     if cache is not None else None)
+        return h, new_cache, jnp.zeros((), jnp.float32)
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+def embed(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["emb"], tokens, axis=0)
+
+
+def logits_fn(params, h: jnp.ndarray, cfg: ModelConfig, wb=8, ab=8):
+    h = cm.apply_norm(params["ln_f"], h, cfg.norm_type, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
+                            params["emb"].astype(jnp.float32))
+    else:
+        logits = cm.apply_linear(params["head"], h, wb, ab
+                                 ).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:       # mask padding ids
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def _xent(logits: jnp.ndarray, targets: jnp.ndarray, mask: jnp.ndarray):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    zloss = jnp.sum((logz * mask) ** 2) / denom
+    return jnp.sum(nll) / denom, zloss
+
+
+def train_loss(params, batch: dict, cfg: ModelConfig, wvec, avec
+               ) -> Tuple[jnp.ndarray, dict]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    mask = jnp.asarray(batch.get("loss_mask", jnp.ones_like(tgt)),
+                       jnp.float32)
+
+    x = embed(params, inp)
+    enc_out = None
+    if cfg.family == "vlm":
+        prefix = batch["prefix"].astype(cm.DTYPE)       # (B, P, d) stub
+        x = jnp.concatenate([prefix, x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, prefix.shape[1]), jnp.float32), mask], axis=1)
+        tgt = jnp.concatenate(
+            [jnp.zeros((B, prefix.shape[1]), tgt.dtype), tgt], axis=1)
+    elif cfg.family == "encdec":
+        enc_out = encdec.encode(params["layers"], batch["frames"].astype(cm.DTYPE),
+                                cfg, wvec, avec)
+    x = dist.constrain(x, ("dp", None, None))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                 (B, x.shape[1]))
+    h, _, aux = forward_hidden(params, x, cfg, wvec, avec,
+                               positions=positions, enc_out=enc_out)
+    logits = logits_fn(params, h, cfg, wvec[-1], avec[-1])
+    logits = dist.constrain(logits, ("dp", None, "tp"))
+    loss, zloss = _xent(logits, tgt, mask)
+    total = loss + 1e-4 * zloss + MOE_AUX_COEF * aux
+    return total, {"loss": loss, "zloss": zloss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def empty_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return tf.empty_cache(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return mamba2.empty_state(cfg, batch, cfg.n_layers)
+    if cfg.family == "hybrid":
+        return hybrid.empty_hybrid_cache(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        frames = max(max_len // cfg.frames_ratio, 1)
+        return {
+            "self": tf.empty_cache(cfg, batch, max_len),
+            "cross": {
+                "k": jnp.zeros((cfg.n_layers, batch, frames, cfg.n_kv_heads,
+                                cfg.head_dim), cm.DTYPE),
+                "v": jnp.zeros((cfg.n_layers, batch, frames, cfg.n_kv_heads,
+                                cfg.head_dim), cm.DTYPE),
+            },
+        }
+    raise ValueError(cfg.family)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, wvec, avec, cache: dict
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Full-context forward filling ``cache``; returns last-token logits."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params, tokens)
+    enc_out = None
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["prefix"].astype(cm.DTYPE), x], axis=1)
+    elif cfg.family == "encdec":
+        enc_out = encdec.encode(params["layers"], batch["frames"].astype(cm.DTYPE),
+                                cfg, wvec, avec)
+        cache = {"self": cache["self"]}        # cross is rebuilt from enc_out
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], (B, x.shape[1]))
+    h, new_cache, _ = forward_hidden(params, x, cfg, wvec, avec,
+                                     positions=positions, cache=cache,
+                                     enc_out=enc_out)
+    return logits_fn(params, h[:, -1:], cfg, wvec[-1], avec[-1]), new_cache
+
+
+def decode_step(params, tok: jnp.ndarray, t, cache: dict, cfg: ModelConfig,
+                wvec, avec) -> Tuple[jnp.ndarray, dict]:
+    """One decode step: tok (B, 1) int32, t scalar position. Returns
+    (logits (B, 1, V), new_cache)."""
+    B = tok.shape[0]
+    x = embed(params, tok)
+    t = jnp.asarray(t, jnp.int32)
+    positions = jnp.broadcast_to(t[None, None], (B, 1))
+    h, new_cache, _ = forward_hidden(params, x, cfg, wvec, avec,
+                                     positions=positions, cache=cache, t=t)
+    return logits_fn(params, h, cfg, wvec[-1], avec[-1]), new_cache

@@ -1,0 +1,371 @@
+"""Dense transformer blocks: GQA attention (RoPE, qk_norm, QKV bias, sliding
+window), SwiGLU/GELU MLPs, KV-cache prefill/decode.
+
+Everything is a pure function over parameter pytrees.  All GEMMs go through
+``common.apply_linear`` so the per-layer (wbits, abits) runtime scalars give
+bit-fluid mixed precision in both train (fake-quant STE) and serve (integer
+container) modes.
+
+Cache convention (per layer):
+  {"k": (B, Sc, KV, hd), "v": (B, Sc, KV, hd), "kpos": (Sc,) int32}
+``Sc`` is the cache capacity — ``min(max_len, window)`` for sliding-window
+models, so a 500k-token starcoder2 decode keeps a 4k ring buffer.  Slot
+``t % Sc`` is overwritten at step t; ``kpos`` records the absolute position
+held by each slot (-2^30 = empty) and drives the visibility mask, which
+makes full-window and ring-buffer attention the same code path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import dist
+from repro.models import common as cm
+
+NEG_POS = -(2 ** 30)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": cm.dense_init(ks[0], d, H * hd, bias=cfg.qkv_bias),
+        "wk": cm.dense_init(ks[1], d, KV * hd, bias=cfg.qkv_bias),
+        "wv": cm.dense_init(ks[2], d, KV * hd, bias=cfg.qkv_bias),
+        "wo": cm.dense_init(ks[3], H * hd, d,
+                            scale=(H * hd) ** -0.5 / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), cm.DTYPE)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), cm.DTYPE)}
+    return p
+
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {"wg": cm.dense_init(ks[0], d, f),
+                "wu": cm.dense_init(ks[1], d, f),
+                "wd": cm.dense_init(ks[2], f, d, scale=f ** -0.5)}
+    return {"wi": cm.dense_init(ks[0], d, f, bias=cfg.norm_type == "layer"),
+            "wd": cm.dense_init(ks[1], f, d, bias=cfg.norm_type == "layer",
+                                scale=f ** -0.5)}
+
+
+def block_init(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": cm.norm_init(cfg.d_model, cfg.norm_type),
+        "attn": attn_init(k1, cfg),
+        "ln2": cm.norm_init(cfg.d_model, cfg.norm_type),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def empty_cache(cfg, batch: int, max_len: int, n_layers: Optional[int] = None,
+                dtype=cm.DTYPE) -> dict:
+    """Stacked (n_layers, ...) cache pytree for the decode scan.
+
+    kv_cache_bits == 8 stores int8 keys/values with per-(token, head)
+    scales — half the HBM traffic per decoded token, and the QK/PV dots
+    run on the int8 MXU path (2x peak)."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    Sc = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv = (L, batch, Sc, cfg.n_kv_heads, cfg.head_dim)
+    out = {"kpos": jnp.full((L, Sc), NEG_POS, jnp.int32)}
+    if cfg.kv_cache_bits == 8:
+        out.update({
+            "k": jnp.zeros(kv, jnp.int8),
+            "v": jnp.zeros(kv, jnp.int8),
+            "ks": jnp.zeros(kv[:-1], cm.DTYPE),
+            "vs": jnp.zeros(kv[:-1], cm.DTYPE),
+        })
+    else:
+        out.update({"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)})
+    return out
+
+
+def _quant_heads(x: jnp.ndarray):
+    """(B, S, KV, hd) -> int8 values + per-(token, head) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return q, s[..., 0].astype(cm.DTYPE)
+
+
+def _sdpa_int8(q, kq, ks, vq, vs, bias, cfg):
+    """Decode attention on the int8 cache: scores = (q_q . k_q) sq ks.
+
+    q: (B,1,H,hd) bf16; kq/vq: (B,Sc,KV,hd) int8; ks/vs: (B,Sc,KV)."""
+    B, Sq, H, hd = q.shape
+    KV = kq.shape[2]
+    G = H // KV
+    qq, qs = _quant_heads(q)
+    qg = qq.reshape(B, Sq, KV, G, hd)
+    acc = jnp.einsum("bqkgd,bskd->bkgqs", qg, kq,
+                     preferred_element_type=jnp.int32)
+    qs_g = qs.reshape(B, Sq, KV, G).transpose(0, 2, 3, 1)[..., None]
+    scores = (acc.astype(jnp.float32) * qs_g.astype(jnp.float32)
+              * ks.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, None, :])
+    scores = scores * (hd ** -0.5) + bias[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fold v scales into probs, quantize probs to int8 (p in [0,1])
+    pv = probs * vs.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, None, :]
+    pmax = jnp.max(pv, axis=-1, keepdims=True) + 1e-9
+    p_q = jnp.clip(jnp.round(pv / pmax * 127.0), 0, 127).astype(jnp.int8)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p_q, vq,
+                     preferred_element_type=jnp.int32)
+    out = out.astype(jnp.float32) * (pmax.transpose(0, 3, 1, 2, 4) / 127.0)
+    return out.reshape(B, Sq, H * hd).astype(cm.DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _qkv(p, x, cfg, wbits, abits):
+    B, S = x.shape[:2]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = cm.apply_linear(p["wq"], x, wbits, abits).reshape(B, S, H, hd)
+    k = cm.apply_linear(p["wk"], x, wbits, abits).reshape(B, S, KV, hd)
+    v = cm.apply_linear(p["wv"], x, wbits, abits).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = cm.rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, bias, cfg):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd); bias: (Sq,Sk) or (B,Sq,Sk).
+
+    Grouped-query einsum; used for decode (Sq==1) and short sequences,
+    where the scores tensor is small.  Long sequences take _flash_sdpa."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if bias.ndim == 2:
+        scores = scores + bias[None, None, None]
+    else:
+        scores = scores + bias[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(k.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H * hd).astype(cm.DTYPE)
+
+
+FLASH_THRESHOLD = 2048
+FLASH_CHUNK = 2048
+NEG_INF = -1e30
+
+
+def _flash_sdpa(q, k, v, q_pos, k_pos, cfg, causal: bool):
+    """Blockwise (flash) attention in pure JAX: O(S·chunk) memory.
+
+    q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) — KV heads are expanded to H flat
+    heads so the `model` axis shards the head dim of every intermediate
+    (Megatron semantics); the scores tensor never materializes beyond one
+    (B, H, Qc, Kc) tile per scan step.  q_pos/k_pos: (Sq,)/(Sk,) absolute
+    positions driving the causal/sliding-window mask per tile.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if G > 1:                                 # expand GQA to flat heads
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    k = dist.constrain(k, ("dp", None, "tp", None))
+    v = dist.constrain(v, ("dp", None, "tp", None))
+
+    Qc = min(FLASH_CHUNK, Sq)
+    Kc = min(FLASH_CHUNK, Sk)
+    assert Sq % Qc == 0 and Sk % Kc == 0, (Sq, Sk, Qc, Kc)
+    nq, nk = Sq // Qc, Sk // Kc
+    scale = hd ** -0.5
+
+    q5 = jnp.moveaxis(q.reshape(B, nq, Qc, H, hd), 1, 0).astype(cm.DTYPE)
+    k5 = jnp.moveaxis(k.reshape(B, nk, Kc, H, hd), 1, 0).astype(cm.DTYPE)
+    v5 = jnp.moveaxis(v.reshape(B, nk, Kc, H, hd), 1, 0).astype(cm.DTYPE)
+    qp = q_pos.reshape(nq, Qc)
+    kp = k_pos.reshape(nk, Kc)
+
+    def q_block(_, xs_q):
+        qb, qpb = xs_q                        # (B,Qc,H,hd), (Qc,)
+
+        def kv_block(carry, xs_k):
+            m, l, acc = carry
+            kb, vb, kpb = xs_k                # (B,Kc,H,hd), (Kc,)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                vis = kpb[None, :] <= qpb[:, None]
+                if cfg.sliding_window:
+                    vis &= kpb[None, :] > qpb[:, None] - cfg.sliding_window
+                s = jnp.where(vis[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            if causal:
+                p = jnp.where(vis[None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = (acc * corr[..., None]
+                   + jnp.einsum("bhqk,bkhd->bhqd", p.astype(cm.DTYPE), vb,
+                                preferred_element_type=jnp.float32))
+            return (m_new, l, acc), ()
+
+        m0 = jnp.full((B, H, Qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, Qc), jnp.float32)
+        a0 = jnp.zeros((B, H, Qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (k5, v5, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,H,Qc,hd)
+        return None, jnp.moveaxis(out, 1, 2)              # (B,Qc,H,hd)
+
+    _, blocks = jax.lax.scan(q_block, None, (q5, qp))     # (nq,B,Qc,H,hd)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H * hd)
+    return out.astype(cm.DTYPE)
+
+
+def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
+              kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              cache: Optional[dict] = None, t=None):
+    """Self- or cross-attention with optional cache update.
+
+    positions: (B, S) absolute positions of x's tokens (for RoPE + mask).
+    kv:        precomputed (k, v) for cross-attention (RoPE skipped).
+    cache/t:   decode path — insert this step's k/v at slot t % Sc.
+    Returns (out, new_cache).
+    """
+    q, k_new, v_new = _qkv(p, x, cfg, wbits, abits)
+    if cfg.rope_theta > 0 and kv is None:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k_new = cm.apply_rope(k_new, positions, cfg.rope_theta)
+
+    new_cache = None
+    out = None
+    if kv is not None:                                   # cross-attention
+        k, v = kv
+        if q.shape[1] * k.shape[1] > FLASH_THRESHOLD ** 2:
+            out = _flash_sdpa(q, k, v, positions[0],
+                              jnp.arange(k.shape[1]), cfg, causal=False)
+        else:
+            bias = jnp.zeros((q.shape[1], k.shape[1]), jnp.float32)
+            out = _sdpa(q, k, v, bias, cfg)
+    elif cache is not None and x.shape[1] == 1:          # decode (S == 1)
+        # consistent head/hd sharding across q, k/v inserts, and the cache:
+        # the KV head count decides the axis for *all* of q/k/v
+        use_head = k_new.shape[2] % dist.api.tp_size() == 0
+        q = dist.constrain_heads(q, 2, 3, use_head)
+        k_new = dist.constrain_heads(k_new, 2, 3, use_head)
+        v_new = dist.constrain_heads(v_new, 2, 3, use_head)
+        Sc = cache["k"].shape[1]
+        slot = (t % Sc).astype(jnp.int32)
+        kpos = jax.lax.dynamic_update_slice(cache["kpos"], t[None], (slot,))
+        visible = kpos[None, :] <= positions[:, -1:]     # (B, Sc)
+        if cfg.sliding_window:
+            visible &= kpos[None, :] > positions[:, -1:] - cfg.sliding_window
+        bias = jnp.where(visible, 0.0, -jnp.inf)[:, None, :].astype(jnp.float32)
+        bias = bias.reshape(x.shape[0], 1, Sc)           # (B, Sq=1, Sc)
+        if "ks" in cache:                                # int8 cache path
+            kq_n, ks_n = _quant_heads(k_new)
+            vq_n, vs_n = _quant_heads(v_new)
+            k = jax.lax.dynamic_update_slice(cache["k"], kq_n, (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], vq_n, (0, slot, 0, 0))
+            ks = jax.lax.dynamic_update_slice(cache["ks"], ks_n, (0, slot, 0))
+            vs = jax.lax.dynamic_update_slice(cache["vs"], vs_n, (0, slot, 0))
+            new_cache = {"k": k, "v": v, "ks": ks, "vs": vs, "kpos": kpos}
+            out = _sdpa_int8(q, k, ks, v, vs, bias, cfg)
+        else:
+            k = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                             (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                             (0, slot, 0, 0))
+            new_cache = {"k": k, "v": v, "kpos": kpos}
+            out = _sdpa(q, k, v, bias, cfg)
+    else:                                                # full sequence
+        pos1 = positions[0]
+        k, v = k_new, v_new
+        if x.shape[1] > FLASH_THRESHOLD:
+            out = _flash_sdpa(q, k, v, pos1, pos1, cfg, causal=causal)
+        else:
+            bias = (cm.causal_mask_bias(pos1, pos1, cfg.sliding_window)
+                    if causal
+                    else jnp.zeros((x.shape[1], x.shape[1]), jnp.float32))
+            out = _sdpa(q, k, v, bias, cfg)
+        if cache is not None:                            # prefill: fill cache
+            new_cache = prefill_cache_insert(cache, k_new, v_new, positions)
+
+    y = cm.apply_linear(p["wo"], out, wbits, abits)
+    return y, new_cache
+
+
+def prefill_cache_insert(cache_layer: dict, k: jnp.ndarray, v: jnp.ndarray,
+                         positions: jnp.ndarray) -> dict:
+    """Write a full prefill's k/v (B,S,KV,hd) into a fresh layer cache."""
+    Sc = cache_layer["k"].shape[1]
+    S = k.shape[1]
+    keep = min(S, Sc)
+    kpos = jax.lax.dynamic_update_slice(
+        cache_layer["kpos"], positions[0, S - keep:].astype(jnp.int32), (0,))
+    if "ks" in cache_layer:                              # int8 cache
+        kq, ks = _quant_heads(k[:, S - keep:])
+        vq, vs = _quant_heads(v[:, S - keep:])
+        return {
+            "k": jax.lax.dynamic_update_slice(cache_layer["k"], kq,
+                                              (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache_layer["v"], vq,
+                                              (0, 0, 0, 0)),
+            "ks": jax.lax.dynamic_update_slice(cache_layer["ks"], ks,
+                                               (0, 0, 0)),
+            "vs": jax.lax.dynamic_update_slice(cache_layer["vs"], vs,
+                                               (0, 0, 0)),
+            "kpos": kpos,
+        }
+    ck = jax.lax.dynamic_update_slice(
+        cache_layer["k"], k[:, S - keep:], (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache_layer["v"], v[:, S - keep:], (0, 0, 0, 0))
+    return {"k": ck, "v": cv, "kpos": kpos}
+
+
+# ---------------------------------------------------------------------------
+# MLP + block
+# ---------------------------------------------------------------------------
+
+def mlp(p, x, cfg, wbits=8, abits=8):
+    if cfg.mlp_type == "swiglu":
+        g = cm.apply_linear(p["wg"], x, wbits, abits)
+        u = cm.apply_linear(p["wu"], x, wbits, abits)
+        h = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+        return cm.apply_linear(p["wd"], h.astype(cm.DTYPE), wbits, abits)
+    h = cm.apply_linear(p["wi"], x, wbits, abits)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cm.DTYPE)
+    return cm.apply_linear(p["wd"], h, wbits, abits)
+
+
+def block(p, x, cfg, wbits=8, abits=8, *, positions, causal=True,
+          cache=None, t=None, mlp_fn=None):
+    """Pre-norm residual block.  Returns (x, new_cache, aux)."""
+    h, new_cache = attention(p["attn"], cm.apply_norm(p["ln1"], x, cfg.norm_type,
+                                                      cfg.norm_eps),
+                             cfg, wbits, abits, positions=positions,
+                             causal=causal, cache=cache, t=t)
+    x = x + h
+    fn = mlp_fn if mlp_fn is not None else mlp
+    out = fn(p["mlp"], cm.apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps),
+             cfg, wbits, abits)
+    if isinstance(out, tuple):                    # MoE returns (y, aux)
+        y, aux = out
+    else:
+        y, aux = out, jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux

@@ -1,0 +1,3 @@
+from repro.train.loop import TrainConfig, make_train_step  # noqa: F401
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.train.watchdog import StragglerWatchdog  # noqa: F401

@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: atomic save, resharding restore (elastic).
+
+Format: one ``.npz`` per host (this container: one) + a JSON manifest with
+step, mesh topology, and the flattened key list.  Writes go to a temp dir
+renamed into place (atomic on POSIX), so a crash mid-save never corrupts
+the latest checkpoint; ``restore_checkpoint`` takes *target shardings* and
+``device_put``s each leaf — a checkpoint written on mesh A restores onto
+mesh B (elastic scaling: grow/shrink the pod between runs).
+
+At 1000+ nodes the same layout shards the npz per host
+(``process_index`` key in the manifest); the gather/scatter points are
+marked below.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Atomic save of a pytree (params/opt state/data state)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    # gather point: multi-host would save only addressable shards here
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype.kind not in "biufc":          # bf16 etc: store raw bits
+            a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+        arrays[k] = a
+    manifest = {
+        "step": int(step),
+        "keys": sorted(arrays.keys()),
+        "dtypes": dtypes,
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "extra": extra or {},
+    }
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _update_latest(ckpt_dir, step)
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _update_latest(ckpt_dir: str, step: int) -> None:
+    tmp = os.path.join(ckpt_dir, ".latest_tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+    os.replace(tmp, os.path.join(ckpt_dir, "LATEST"))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore_checkpoint(ckpt_dir: str, target: Any,
+                       shardings: Optional[Any] = None,
+                       step: Optional[int] = None):
+    """Restore into the structure of ``target``; reshard onto ``shardings``
+    (a matching pytree of NamedSharding / None).  Returns (tree, step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    dtypes = manifest.get("dtypes", {})
+    flat_t = jax.tree_util.tree_flatten_with_path(target)
+    flat_s = (jax.tree_util.tree_flatten(shardings)[0]
+              if shardings is not None else [None] * len(flat_t[0]))
+    leaves = []
+    for (path, leaf), shd in zip(flat_t[0], flat_s):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(data[key])
+        saved_dt = dtypes.get(key)
+        if saved_dt and arr.dtype.kind in "u" and saved_dt not in (
+                str(arr.dtype),):
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, saved_dt,
+                                            saved_dt)))
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        # scatter point: reshard onto the (possibly different) target mesh
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(flat_t[1], leaves), step

@@ -1,0 +1,81 @@
+"""The pjit train step: microbatched grad accumulation + AdamW + metrics.
+
+``make_train_step(cfg, model_cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with donated params/opt_state.  Gradient accumulation is a
+``lax.scan`` over ``n_accum`` microbatches (activation memory / n_accum);
+the accumulator dtype follows ``ModelConfig.accum_dtype`` (bf16 for the
+1T-param config).  XLA overlaps the FSDP reduce-scatter/all-gather with
+the backward automatically; §Perf iterates on the schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    n_accum: int = 1                    # microbatches per step
+    wbits: Tuple[int, ...] = (8,)       # per-layer precision policy tables
+    abits: Tuple[int, ...] = (8,)
+
+
+def make_train_step(tcfg: TrainConfig, cfg, param_shardings=None):
+    nbits = lm.n_bit_slots(cfg)
+    wvec = jnp.asarray([tcfg.wbits[min(i, len(tcfg.wbits) - 1)]
+                        for i in range(nbits)], jnp.int32)
+    avec = jnp.asarray([tcfg.abits[min(i, len(tcfg.abits) - 1)]
+                        for i in range(nbits)], jnp.int32)
+    acc_dtype = jnp.dtype(cfg.accum_dtype)
+
+    def pin(tree):
+        """Pin gradient/accumulator leaves to the parameter sharding —
+        the scan carry otherwise REPLICATES (a 1T-param model's grad
+        accumulator replicated = 2 TB/device of temp; §Perf kimi iter 2)."""
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_shardings)
+
+    def loss_fn(params, microbatch):
+        return lm.train_loss(params, microbatch, cfg, wvec, avec)
+
+    def train_step(params, opt_state, batch):
+        n = tcfg.n_accum
+
+        def split(x):
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def accum(carry, mb):
+            g_acc, l_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = pin(jax.tree.map(
+                lambda a, g: a + g.astype(acc_dtype) / n, g_acc,
+                pin(grads)))
+            return (g_acc, l_acc + loss / n), metrics
+
+        g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                              params))
+        (grads, loss), metrics = jax.lax.scan(
+            accum, (g0, jnp.zeros((), jnp.float32)), micro)
+        grads = pin(grads)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg.optimizer)
+        out = {"loss": loss, **{k: jnp.mean(v) for k, v in metrics.items()},
+               **opt_metrics}
+        return new_params, new_opt, out
+
+    return train_step, (wvec, avec)

@@ -1,0 +1,98 @@
+"""core/bitfluid: quantization, bit planes, dyadic requant — property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitfluid as bf
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 6, 8])
+def test_quant_dequant_bounds(rng, bits):
+    x = rng.normal(size=(64, 32)).astype(np.float32) * 10
+    s = bf.symmetric_scale(jnp.asarray(x), bits)
+    q = bf.quantize(jnp.asarray(x), s, bits)
+    lim = 2 ** (bits - 1) - 1
+    assert np.abs(np.asarray(q)).max() <= lim
+    err = np.abs(np.asarray(bf.dequantize(q, s)) - x).max()
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_bitplane_roundtrip_exhaustive(bits):
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jnp.arange(lo, hi + 1, dtype=jnp.int8)
+    planes = bf.bitplanes(q, bits)
+    assert planes.shape == (bits,) + q.shape
+    np.testing.assert_array_equal(np.asarray(bf.from_bitplanes(planes, bits)),
+                                  np.asarray(q))
+
+
+@given(st.integers(min_value=-127, max_value=127),
+       st.integers(min_value=2, max_value=8))
+@settings(max_examples=200, deadline=None)
+def test_requant_shift_dyadic(v, to_bits):
+    """round-half-away(q / 2^(8-b)), clipped — pure integer dyadic."""
+    out = int(bf.requant_shift(jnp.asarray([v], jnp.int8), to_bits)[0])
+    shift = 8 - to_bits
+    expect = np.sign(v) * ((abs(v) + (1 << shift >> 1)) >> shift) if shift \
+        else v
+    lim = 2 ** (to_bits - 1) - 1
+    assert out == int(np.clip(expect, -lim, lim))
+
+
+def test_requant_traced_bits_matches_static(rng):
+    q = jnp.asarray(rng.integers(-127, 128, (256,)), jnp.int8)
+    for b in (2, 4, 6, 8):
+        static = bf.requant_shift(q, b)
+        traced = jax.jit(bf.requant_shift)(q, jnp.asarray(b))
+        np.testing.assert_array_equal(np.asarray(static), np.asarray(traced))
+
+
+def test_int4_pack_roundtrip(rng):
+    q = rng.integers(-8, 8, (64, 128)).astype(np.int8)
+    for pack, unpack in ((bf.pack_int4, bf.unpack_int4),
+                         (bf.pack_int4_halves, bf.unpack_int4_halves)):
+        p = pack(jnp.asarray(q))
+        assert p.shape == (64, 64) and p.dtype == jnp.uint8
+        np.testing.assert_array_equal(np.asarray(unpack(p)), q)
+
+
+def test_fake_quant_ste_gradient(rng):
+    x = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(bf.fake_quant(v, 4) ** 2))(x)
+    # STE: gradient flows as if identity (2x at quantized point)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).max() > 0
+
+
+def test_fake_quant_fp_sentinel(rng):
+    x = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(bf.fake_quant(x, 16)),
+                                  np.asarray(x))
+
+
+def test_fluid_matmul_bits_monotone_error(rng):
+    """More bits -> lower quantization error (the accuracy/cost dial)."""
+    x = rng.normal(size=(64, 128)).astype(np.float32)
+    w = (rng.normal(size=(128, 64)) * 0.05).astype(np.float32)
+    ws = bf.symmetric_scale(jnp.asarray(w), 8, axis=0)
+    qw = bf.quantize(jnp.asarray(w), ws, 8)
+    exact = x @ w
+    errs = []
+    for b in (2, 4, 8):
+        y = bf.fluid_int8_matmul(jnp.asarray(x), qw, ws, wbits=b, abits=8)
+        errs.append(float(np.abs(np.asarray(y) - exact).mean()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_bitplane_matmul_ref_identity(rng):
+    """sum_j w_j (x @ plane_j) == x @ q exactly (int32)."""
+    x = rng.integers(-127, 128, (32, 64)).astype(np.int8)
+    for bits in (2, 4, 8):
+        lim = 2 ** (bits - 1)
+        w = rng.integers(-lim, lim, (64, 48)).astype(np.int8)
+        got = bf.bitplane_matmul_ref(jnp.asarray(x), jnp.asarray(w), bits)
+        np.testing.assert_array_equal(
+            np.asarray(got), x.astype(np.int64) @ w.astype(np.int64))

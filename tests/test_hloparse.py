@@ -1,0 +1,71 @@
+"""hloparse: trip-count-aware walker vs cost_analysis ground truth."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hloparse
+
+W = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+X = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+FLOPS_ONE = 2 * 64 * 256 * 256
+
+
+def _scan(n):
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, None, length=n)
+        return c
+    return f
+
+
+def test_cost_analysis_undercounts_loops():
+    """The reason the walker exists: XLA counts while bodies once."""
+    c = jax.jit(_scan(10)).lower(W, X).compile()
+    # body x1 (+ a couple of loop-counter flops), NOT x10
+    assert c.cost_analysis()["flops"] < 1.01 * FLOPS_ONE
+
+
+def test_walker_multiplies_trip_count():
+    for n in (1, 4, 10):
+        c = jax.jit(_scan(n)).lower(W, X).compile()
+        s = hloparse.summarize(c.as_text())
+        assert s["flops"] == n * FLOPS_ONE, (n, s["flops"])
+
+
+def test_walker_matches_unrolled_reference():
+    def unrolled(w, x):
+        c = x
+        for _ in range(6):
+            c = jnp.tanh(c @ w)
+        return c
+    comp = jax.jit(unrolled).lower(W, X).compile()
+    s = hloparse.summarize(comp.as_text())
+    ca = comp.cost_analysis()
+    assert s["flops"] == ca["flops"] == 6 * FLOPS_ONE
+    assert abs(s["bytes"] - ca["bytes accessed"]) / ca["bytes accessed"] < 0.15
+
+
+def test_nested_scan():
+    def f(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, ()
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+    comp = jax.jit(f).lower(W, X).compile()
+    s = hloparse.summarize(comp.as_text())
+    assert s["flops"] == 15 * FLOPS_ONE
+
+
+def test_int8_dot_bucketed():
+    def f(x, w):
+        return jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+    xi = jax.ShapeDtypeStruct((128, 128), jnp.int8)
+    wi = jax.ShapeDtypeStruct((128, 128), jnp.int8)
+    comp = jax.jit(f).lower(xi, wi).compile()
+    s = hloparse.summarize(comp.as_text())
+    assert s["flops_int8"] == 2 * 128 * 128 * 128
+    assert s["flops"] == 0

@@ -1,0 +1,117 @@
+"""Family-specific correctness: SSD chunked==stepwise parity, MoE routing."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import lm, mamba2, moe
+
+KEY = jax.random.PRNGKey(2)
+
+
+def test_ssd_chunked_matches_stepwise():
+    """The chunked dual form == the naive recurrence, to fp tolerance."""
+    cfg = configs.get_smoke("mamba2_1_3b")
+    B, S = 2, 32
+    d_inner, H, N, P = mamba2.dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    xh = jax.random.normal(k1, (B, S, H, P), jnp.float32)
+    Bm = jax.random.normal(k2, (B, S, N), jnp.float32) * 0.5
+    Cm = jax.random.normal(k3, (B, S, N), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k4, (B, S, H), jnp.float32))
+    a = -jnp.exp(jnp.zeros((H,)))
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    y_chunk, h_chunk = mamba2.ssd_chunked(xh, Bm, Cm, dt, a, h0,
+                                          chunk=cfg.ssm_chunk)
+
+    # naive stepwise recurrence
+    h = h0
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(a[None, :] * dt[:, t])                      # (B,H)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], xh[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    y_step = jnp.stack(ys, axis=1)
+
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mamba_prefill_then_decode_continuity():
+    """Decode continuing from prefill state == full-sequence forward."""
+    cfg = configs.get_smoke("mamba2_1_3b")
+    params = lm.init_params(cfg, KEY)
+    n = lm.n_bit_slots(cfg)
+    w = jnp.full((n,), 16, jnp.int32)       # fp for exactness
+    toks = jax.random.randint(KEY, (1, 17), 0, cfg.vocab_size)
+
+    # full forward on 17 tokens: logits for last position
+    loss_in = {"tokens": toks}
+    cache = lm.empty_cache(cfg, 1, 32)
+    lp, cache = lm.prefill(params, {"tokens": toks[:, :16]}, cfg, w, w, cache)
+    ld, _ = lm.decode_step(params, toks[:, 16:17], jnp.asarray(16), cache,
+                           cfg, w, w)
+    cache2 = lm.empty_cache(cfg, 1, 32)
+    lfull, _ = lm.prefill(params, {"tokens": toks}, cfg, w, w, cache2)
+    np.testing.assert_allclose(np.asarray(ld[:, -1], np.float32),
+                               np.asarray(lfull[:, -1], np.float32),
+                               rtol=0.05, atol=0.08)
+
+
+def test_moe_capacity_and_combination():
+    cfg = configs.get_smoke("moonshot_v1_16b_a3b")
+    p = moe.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.bfloat16)
+    y, aux = moe.apply_moe(p, x, cfg, 8, 8)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux) > 0.0                  # load-balance loss defined
+
+
+def test_moe_expert_selection_matters():
+    """Routing is input-dependent: different tokens -> different outputs
+    (catches dispatch/combine indexing bugs that average experts).
+    Generous capacity so token parity isn't confounded by drops."""
+    cfg = configs.get_smoke("moonshot_v1_16b_a3b").with_(capacity_factor=8.0)
+    p = moe.moe_init(KEY, cfg)
+    x1 = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+    x2 = x1.at[:, 0].mul(-1.0)
+    y1, _ = moe.apply_moe(p, x1.astype(jnp.bfloat16), cfg, 8, 8)
+    y2, _ = moe.apply_moe(p, x2.astype(jnp.bfloat16), cfg, 8, 8)
+    # token 0 changed -> its output changes materially; token 5 unchanged
+    # -> near-identical (small drift allowed: the per-expert dynamic
+    # activation scale covers the whole dispatch buffer, so a token
+    # entering/leaving an expert nudges its neighbours' quantization)
+    d0 = np.abs(np.asarray(y1[0, 0] - y2[0, 0], np.float32)).max()
+    d5 = np.abs(np.asarray(y1[0, 5] - y2[0, 5], np.float32)).max()
+    assert d0 > 0.5, d0
+    assert d5 < 0.1 * d0, (d5, d0)
+
+
+def test_moe_per_expert_bits():
+    """Per-expert precision (paper's per-layer ≈ per-expert granularity)."""
+    cfg = configs.get_smoke("moonshot_v1_16b_a3b")
+    p = moe.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 16, cfg.d_model), jnp.bfloat16)
+    bits_hi = jnp.full((cfg.n_experts,), 8, jnp.int32)
+    bits_mix = jnp.where(jnp.arange(cfg.n_experts) % 2 == 0, 2, 8
+                         ).astype(jnp.int32)
+    y_hi, _ = moe.apply_moe(p, x, cfg, bits_hi, 8)
+    y_mix, _ = moe.apply_moe(p, x, cfg, bits_mix, 8)
+    assert np.abs(np.asarray(y_hi - y_mix, np.float32)).max() > 1e-4
+
+
+def test_hybrid_shared_block_weight_sharing():
+    """zamba2: the shared attention block is ONE weight set; LoRA gives
+    per-site specialization."""
+    cfg = configs.get_smoke("zamba2_2_7b")
+    params = lm.init_params(cfg, KEY)
+    shared = params["layers"]["shared"]["attn"]["wq"]["w"]
+    lora = params["layers"]["lora"]
+    assert shared.ndim == 2                          # not stacked per site
+    assert lora["wq"]["a"].shape[0] == cfg.n_layers // cfg.attn_every

@@ -1,0 +1,125 @@
+"""Precision policies + the bit-fluid serving engine (zero-retrace switch)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import policy as pol
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+
+KEY = jax.random.PRNGKey(1)
+
+
+def test_policy_vectors_extend():
+    p = pol.per_layer([8, 4], name="t")
+    w, a = p.vectors(5)
+    np.testing.assert_array_equal(np.asarray(w), [8, 4, 4, 4, 4])
+
+
+def test_hawq_tables_match_paper_averages():
+    """Table VII average bitwidths: high 7.16, medium 6.53, low 5.05."""
+    n = 20
+    for name, avg in (("high", 7.16), ("medium", 6.53), ("low", 5.05)):
+        w, _ = pol.hawq_v3(name).vectors(n)
+        got = float(np.mean(np.asarray(w)))
+        assert abs(got - avg) < 0.45, (name, got)
+
+
+def test_budget_controller_selection():
+    cfgs = {k: pol.fixed(b, name=k)
+            for k, b in (("int4", 4), ("mix", 6), ("int8", 8))}
+    lat = {"int4": 1.0, "mix": 2.0, "int8": 3.0}
+    c = pol.BudgetController(cfgs, lat, n_layers=4)
+    # generous budget -> most accurate (slowest fitting) config
+    w, _ = c.resolve(10.0)
+    assert int(w[0]) == 8
+    # tight budget -> fastest
+    w, _ = c.resolve(0.5)
+    assert int(w[0]) == 4
+    # middle
+    w, _ = c.resolve(2.5)
+    assert int(w[0]) == 6
+
+
+def test_serving_budget_switch_no_retrace():
+    """Dynamic mixed-precision serving: changing the budget changes bits
+    but never recompiles (the paper's zero-reconfiguration claim)."""
+    cfg = configs.get_smoke("qwen3_4b")
+    params = lm.init_params(cfg, KEY)
+    qparams = lm.quantize_params(params, cfg)
+    n = lm.n_bit_slots(cfg)
+    ctrl = pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 1.0, "int8": 2.0}, n)
+    eng = ServeEngine(cfg, qparams, max_len=64, controller=ctrl)
+    batch = {"tokens": jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)}
+
+    eng.set_budget(10.0)               # int8
+    out8 = eng.generate(batch, steps=4)
+    eng.set_budget(0.5)                # int4
+    out4 = eng.generate(batch, steps=4)
+    assert out8.shape == out4.shape == (2, 4)
+    assert eng.stats.prefill_traces == 1
+    assert eng.stats.decode_traces == 1
+
+
+def test_quantized_serving_close_to_fp():
+    cfg = configs.get_smoke("qwen3_4b")
+    params = lm.init_params(cfg, KEY)
+    qparams = lm.quantize_params(params, cfg)
+    n = lm.n_bit_slots(cfg)
+    w8 = jnp.full((n,), 8, jnp.int32)
+    wfp = jnp.full((n,), 16, jnp.int32)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    cache = lm.empty_cache(cfg, 2, 32)
+    lq, _ = lm.prefill(qparams, batch, cfg, w8, w8, cache)
+    cache = lm.empty_cache(cfg, 2, 32)
+    lf, _ = lm.prefill(params, batch, cfg, wfp, wfp, cache)
+    pq = np.asarray(jax.nn.softmax(lq[:, -1]), np.float32)
+    pf = np.asarray(jax.nn.softmax(lf[:, -1]), np.float32)
+    # int8 serving stays close to the fp teacher distribution
+    assert np.abs(pq - pf).sum(-1).max() < 0.35
+
+
+def test_int4_container_roundtrip():
+    cfg = configs.get_smoke("qwen3_4b")
+    params = lm.init_params(cfg, KEY)
+    q4 = lm.quantize_params(params, cfg, container="int4")
+    n = lm.n_bit_slots(cfg)
+    w4 = jnp.full((n,), 4, jnp.int32)
+    batch = {"tokens": jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)}
+    cache = lm.empty_cache(cfg, 2, 16)
+    logits, _ = lm.prefill(q4, batch, cfg, w4, w4, cache)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # container really is packed nibbles: bytes(q4) ~ half of bytes(int8)
+    q8 = lm.quantize_params(params, cfg, container="int8")
+
+    def gemm_bytes(t, key):
+        return sum(x.size * x.dtype.itemsize
+                   for p, x in jax.tree_util.tree_flatten_with_path(t)[0]
+                   if any(key in str(k) for k in p))
+
+    assert gemm_bytes(q4, "q4") < 0.55 * gemm_bytes(q8, "'q'")
+
+
+def test_int8_kv_cache_matches_bf16():
+    """int8 KV cache (+int8 QK/PV dots) tracks the bf16-cache decode."""
+    cfg = configs.get_smoke("qwen3_4b")
+    cfg8 = cfg.with_(kv_cache_bits=8)
+    params = lm.init_params(cfg, KEY)
+    n = lm.n_bit_slots(cfg)
+    w = jnp.full((n,), 16, jnp.int32)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+
+    outs = {}
+    for c in (cfg, cfg8):
+        cache = lm.empty_cache(c, 2, 32)
+        if c.kv_cache_bits == 8:
+            assert cache["k"].dtype == jnp.int8 and "ks" in cache
+        _, cache = lm.prefill(params, {"tokens": toks}, c, w, w, cache)
+        logits, _ = lm.decode_step(params, toks[:, :1], jnp.asarray(12),
+                                   cache, c, w, w)
+        outs[c.kv_cache_bits] = jax.nn.softmax(logits[:, -1], -1)
+    tv = float(jnp.abs(outs[0] - outs[8]).sum(-1).max()) * 0.5
+    assert tv < 0.15, tv        # total-variation distance of next-token dist
