@@ -1,0 +1,7 @@
+"""BF-IMNA reproduction: bit-fluid mixed-precision LMs on jax.
+
+Subpackages: core (bit-fluid quantization + AP emulator), kernels,
+apsim (analytic IMC cost model), dist (mesh/sharding substrate),
+models, data, optim, train, serve, launch, configs.
+"""
+__version__ = "0.1.0"

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import sharding as dist_sharding
+
 
 def make_batch(seed: int, step: int, batch: int, seq_len: int,
                vocab: int, cfg=None) -> dict:
@@ -53,12 +55,19 @@ def host_slice(global_batch: int) -> slice:
 
 
 class SyntheticLM:
-    """Prefetching iterator over make_batch(seed, step)."""
+    """Prefetching iterator over make_batch(seed, step).
+
+    When a dist mesh is active at iteration time, batches are device_put
+    with their dp-sharded placement (``dist.sharding.shard_batch``) so the
+    train step never re-lays-out its inputs; off-mesh this is an identity.
+    """
 
     def __init__(self, seed: int, batch: int, seq_len: int, vocab: int,
-                 cfg=None, start_step: int = 0, prefetch: int = 2):
+                 cfg=None, start_step: int = 0, prefetch: int = 2,
+                 shard: bool = True):
         self.seed, self.batch, self.seq_len, self.vocab = seed, batch, seq_len, vocab
         self.cfg = cfg
+        self.shard = shard
         self.step = start_step
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
@@ -82,6 +91,8 @@ class SyntheticLM:
     def __next__(self):
         s, b = self._q.get()
         self.step = s + 1
+        if self.shard:
+            b = dist_sharding.shard_batch(b)
         return s, b
 
     def close(self) -> None:

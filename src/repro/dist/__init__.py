@@ -1,0 +1,13 @@
+"""Distributed substrate: logical-axis sharding over jax meshes.
+
+``dist.constrain(x, ("dp", None, "tp"))`` is the whole model-side API —
+logical axes resolve against whatever mesh is active (see
+:mod:`repro.dist.api`) and every op is a no-op off-mesh, so the same model
+code runs on a CPU test, a single host, or a multi-pod production mesh.
+:mod:`repro.dist.sharding` holds the path-based parameter/optimizer/
+batch/cache placement rules used by the launchers and the serving engine.
+"""
+from repro.dist import api, sharding                       # noqa: F401
+from repro.dist.api import (active_mesh, constrain,        # noqa: F401
+                            constrain_heads, dp_size, logical_to_mesh,
+                            tp_size, use_mesh)

@@ -1,0 +1,184 @@
+"""Mesh context + logical-axis resolution — the one sharding vocabulary.
+
+Models speak LOGICAL axes ("dp" data-parallel, "tp" tensor-parallel,
+"dp+tp" both combined, None replicated); this module maps them onto
+whatever mesh is active:
+
+  2-axis mesh ("data", "model")         dp -> "data",           tp -> "model"
+  3-axis mesh ("pod", "data", "model")  dp -> ("pod", "data"),  tp -> "model"
+
+``constrain``/``constrain_heads`` are no-ops when no mesh is active, so
+every model file can sprinkle sharding annotations and still run unchanged
+on CPU tests and single-host launches.
+
+The active mesh is resolved from (in order):
+  1. the explicit :func:`use_mesh` context stack (nestable, thread-local);
+  2. jax's own ``with mesh:`` context manager (what launch/dryrun uses).
+
+Divisibility fallback: a dimension whose size does not divide the product
+of its mapped mesh axes is REPLICATED (per dimension, not per spec) —
+oddball shapes degrade to replication instead of crashing the partitioner.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Logical -> candidate mesh axes, in the order they combine.
+_LOGICAL_AXES = {
+    "dp": ("pod", "data"),
+    "tp": ("model",),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh context stack
+# ---------------------------------------------------------------------------
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_local, "meshes"):
+        _local.meshes = []
+    return _local.meshes
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Push ``mesh`` as the active mesh for the enclosed block (nestable)."""
+    _stack().append(mesh)
+    try:
+        yield mesh
+    finally:
+        _stack().pop()
+
+
+def _jax_context_mesh():
+    """The mesh of an enclosing ``with mesh:`` block, if any."""
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:       # noqa: BLE001 — internals moved; degrade to None
+        pass
+    return None
+
+
+def active_mesh():
+    """Innermost active mesh, or None (=> all dist ops are no-ops)."""
+    stack = _stack()
+    if stack:
+        return stack[-1]
+    return _jax_context_mesh()
+
+
+def dp_size(mesh=None) -> int:
+    """Total data-parallel ways of the active (or given) mesh."""
+    mesh = mesh if mesh is not None else active_mesh()
+    if mesh is None:
+        return 1
+    return math.prod(mesh.shape[a] for a in _LOGICAL_AXES["dp"]
+                     if a in mesh.shape)
+
+
+def tp_size(mesh=None) -> int:
+    """Tensor-parallel ways (size of the "model" axis), 1 without a mesh."""
+    mesh = mesh if mesh is not None else active_mesh()
+    if mesh is None:
+        return 1
+    return math.prod(mesh.shape[a] for a in _LOGICAL_AXES["tp"]
+                     if a in mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# Logical -> mesh resolution
+# ---------------------------------------------------------------------------
+
+def mesh_axes_for(mesh, logical: Optional[str]) -> Tuple[str, ...]:
+    """Mesh axes a logical name maps to on this mesh ("dp+tp" combines)."""
+    if logical is None:
+        return ()
+    names = set(mesh.axis_names)
+    out = []
+    for part in logical.split("+"):
+        try:
+            candidates = _LOGICAL_AXES[part]
+        except KeyError:
+            raise ValueError(f"unknown logical axis {part!r}; "
+                             f"known: {sorted(_LOGICAL_AXES)}") from None
+        out.extend(a for a in candidates if a in names)
+    return tuple(out)
+
+
+def logical_to_mesh(mesh, logical_axes: Sequence[Optional[str]],
+                    shape: Sequence[int]) -> P:
+    """Resolve per-dimension logical axes into a PartitionSpec.
+
+    Per-dimension divisibility fallback: if the dim size does not divide
+    the product of the mapped mesh-axis sizes, that dimension replicates.
+    A mesh axis is consumed at most once per spec (first dim wins).
+    """
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set = set()
+    entries = []
+    for dim, logical in zip(shape, logical_axes):
+        axes = tuple(a for a in mesh_axes_for(mesh, logical)
+                     if a not in used)
+        size = math.prod(mesh.shape[a] for a in axes) if axes else 0
+        if not axes or size <= 1 or dim % size != 0:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Sharding constraints (no-ops without a mesh)
+# ---------------------------------------------------------------------------
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` across jax versions.
+
+    The function moved out of ``jax.experimental`` and its replication-
+    check kwarg was renamed ``check_rep`` -> ``check_vma`` along the way.
+    """
+    try:
+        from jax import shard_map as sm
+    except ImportError:                         # older jax
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]]):
+    """``with_sharding_constraint`` in logical axes; identity off-mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_mesh(mesh, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_heads(x, head_dim: int, alt_dim: int, use_head: bool):
+    """Shard dim 0 over dp and ONE of (head_dim | alt_dim) over tp.
+
+    Attention uses this to keep q/k/v/cache consistently sharded: when the
+    (KV-)head count divides tp, shard heads (Megatron); otherwise fall
+    back to sharding the per-head feature dim (``alt_dim``).
+    """
+    axes: list = [None] * x.ndim
+    axes[0] = "dp"
+    axes[head_dim if use_head else alt_dim] = "tp"
+    return constrain(x, tuple(axes))

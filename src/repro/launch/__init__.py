@@ -1,0 +1,5 @@
+"""Launchers: production meshes, shape specs, dry-run lowering, train/serve
+drivers.  Deliberately empty — ``launch.dryrun`` must set XLA_FLAGS before
+any jax initialization, so nothing here may import jax at package-import
+time.
+"""

@@ -5,12 +5,17 @@ MUST set the fake-device flag before ANY jax import (jax locks the device
 count on first init):
 """
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+import re
+# Drop any inherited device-count flag (CI exports =8 for the mesh tests;
+# whichever flag comes LAST wins inside XLA) before forcing 512.
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = (_inherited.strip()
+                           + " --xla_force_host_platform_device_count=512"
+                           ).strip()
 
 import argparse           # noqa: E402
 import json               # noqa: E402
-import re                 # noqa: E402
 import subprocess         # noqa: E402
 import sys                # noqa: E402
 import time               # noqa: E402
@@ -217,7 +222,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = hloparse.cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     walk = hloparse.summarize(hlo)          # trip-count-exact per-device cost
     colls = walk["collectives"]

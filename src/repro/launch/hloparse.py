@@ -41,6 +41,36 @@ _NO_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
                  "constant", "after-all", "custom-call"}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions (older
+    jaxlibs return a one-element list of dicts, newer return the dict)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def _operand_segment(line: str, op: str) -> str:
+    """The balanced-paren operand list of ``op`` on this line.
+
+    Operands are printed WITH their types (``dot(f32[64,256]{1,0} %a, …)``)
+    and tuple types nest parens, so a greedy regex won't do.
+    """
+    i = line.find(" " + op + "(")
+    if i < 0:
+        return ""
+    start = line.index("(", i)
+    depth = 0
+    for j in range(start, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start + 1:j]
+    return line[start + 1:]
+
+
 def _shape_info(type_str: str) -> List[Tuple[str, int]]:
     """[(dtype, numel), ...] for a possibly-tuple type string."""
     out = []
@@ -99,31 +129,29 @@ def _parse_computations(hlo: str) -> Dict[str, List[str]]:
     return comps
 
 
-def _dot_flops(line: str, symbols: Dict[str, str], result_type: str
-               ) -> Tuple[float, bool]:
+def _dot_flops(line: str, result_type: str) -> Tuple[float, bool]:
     """(flops, is_int8). flops = 2 * |result| * prod(contracted lhs dims)."""
     info = _shape_info(result_type)
     if not info:
         return 0.0, False
     result_n = info[0][1]
-    ops = re.search(r"\bdot\(([^)]*)\)", line)
-    lhs_type = None
-    if ops:
-        names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-        if names:
-            lhs_type = symbols.get(names[0])
+    seg = _operand_segment(line, "dot")
     contract = 1
-    if lhs_type is not None:
-        lhs_info = _shape_info(lhs_type)
-        if lhs_info:
-            dims_m = re.search(r"\[([\d,]*)\]", lhs_type)
-            lhs_dims = [int(d) for d in dims_m.group(1).split(",") if d]
-            cm = _CONTRACT_RE.search(line)
-            if cm and cm.group(1):
-                for i in (int(x) for x in cm.group(1).split(",")):
-                    if i < len(lhs_dims):
-                        contract *= lhs_dims[i]
-    is_int8 = lhs_type is not None and ("s8[" in lhs_type or "u8[" in lhs_type)
+    lhs_dt = None
+    m = _SHAPE_RE.search(seg)               # lhs type is inline in operands
+    if m:
+        lhs_dt = m.group(1)
+        lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+        cm = _CONTRACT_RE.search(line)
+        if cm and cm.group(1):
+            for i in (int(x) for x in cm.group(1).split(",")):
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    # Integer dots are the int8-container path (quantized serving / int8
+    # KV attention).  On TPU the operands stay s8; the CPU backend widens
+    # them to s32 inside a fusion before the dot, so classify by "any
+    # integer accumulate" rather than chasing converts through fusions.
+    is_int8 = lhs_dt in ("s8", "u8", "s16", "u16", "s32", "u32")
     return 2.0 * result_n * contract, is_int8
 
 
@@ -137,11 +165,6 @@ def analyze(hlo: str) -> Cost:
         cost = Cost()
         cache[name] = cost                       # cycle guard
         lines = comps.get(name, [])
-        symbols: Dict[str, str] = {}
-        for line in lines:
-            d = _DEF_RE.match(line)
-            if d:
-                symbols[d.group(1)] = d.group(2)
         for line in lines:
             d = _DEF_RE.match(line)
             if not d:
@@ -173,12 +196,12 @@ def analyze(hlo: str) -> Cost:
                     part["bytes"] = 0.0
                     cost.add(part)
                 cost["bytes"] += _bytes_of(result_type) + _operand_bytes(
-                    line, symbols, op)
+                    line, op)
                 continue
             if op == "dot":
-                fl, is8 = _dot_flops(line, symbols, result_type)
+                fl, is8 = _dot_flops(line, result_type)
                 cost["flops_int8" if is8 else "flops"] += fl
-                b = _bytes_of(result_type) + _operand_bytes(line, symbols, op)
+                b = _bytes_of(result_type) + _operand_bytes(line, op)
                 cost["bytes"] += b
                 cost["bytes_dot"] += b
                 continue
@@ -195,19 +218,13 @@ def analyze(hlo: str) -> Cost:
             if op in _NO_BYTES_OPS or op.endswith("-done"):
                 continue
             cost["bytes"] += _bytes_of(result_type) + _operand_bytes(
-                line, symbols, op)
+                line, op)
         return cost
 
-    def _operand_bytes(line: str, symbols: Dict[str, str], op: str) -> float:
-        m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
-        if not m:
-            return 0.0
-        total = 0.0
-        for o in m.group(1).split(","):
-            o = o.strip().lstrip("%")
-            if o in symbols:
-                total += _bytes_of(symbols[o])
-        return total
+    def _operand_bytes(line: str, op: str) -> float:
+        # Operand types are printed inline in scheduled HLO; sum them
+        # directly rather than resolving names through the symbol table.
+        return _bytes_of(_operand_segment(line, op))
 
     return comp_cost("__entry__" if "__entry__" in comps
                      else next(iter(comps)))

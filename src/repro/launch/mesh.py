@@ -22,7 +22,8 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
-    assert n % model == 0
+    assert n % model == 0, \
+        f"model={model} must divide the {n} visible devices"
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 

@@ -13,15 +13,17 @@ relaunch to see the fault-tolerance path.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, dist
 from repro.data.pipeline import SyntheticLM
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.train.checkpoint import (latest_step, restore_checkpoint,
@@ -42,6 +44,8 @@ def main() -> None:
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--wbits", type=int, nargs="+", default=[8])
     ap.add_argument("--abits", type=int, nargs="+", default=[8])
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-parallel ways of the host mesh")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -52,18 +56,41 @@ def main() -> None:
     tcfg = TrainConfig(optimizer=AdamWConfig(lr=args.lr),
                        n_accum=args.accum,
                        wbits=tuple(args.wbits), abits=tuple(args.abits))
-    step_fn, (wvec, avec) = make_train_step(tcfg, cfg)
-    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
 
+    # Mesh over whatever devices exist; with one device everything below
+    # (constraints, placements, batch sharding) degrades to the identity.
+    mesh = None
+    if args.tp > 1 or len(jax.devices()) > 1:
+        mesh = make_host_mesh(model=args.tp)
+        print(f"[train] mesh {dict(mesh.shape)}")
+    mesh_ctx = dist.use_mesh(mesh) if mesh is not None \
+        else contextlib.nullcontext()
+
+    with mesh_ctx:
+        _run(args, cfg, tcfg, mesh)
+
+
+def _run(args, cfg, tcfg, mesh) -> None:
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
     opt = adamw_init(params, tcfg.optimizer)
+    p_shd = o_shd = None
+    if mesh is not None:
+        p_shd = shd.param_shardings(params, mesh)
+        o_shd = shd.opt_shardings(opt, mesh)
+        params = jax.device_put(params, p_shd)
+        opt = jax.device_put(opt, o_shd)
+    step_fn, (wvec, avec) = make_train_step(tcfg, cfg, param_shardings=p_shd)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
     start = 0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         target = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
             {"params": params, "opt": opt})
-        restored, start = restore_checkpoint(args.ckpt_dir, target)
+        shardings = None
+        if mesh is not None:
+            shardings = {"params": p_shd, "opt": o_shd}
+        restored, start = restore_checkpoint(args.ckpt_dir, target, shardings)
         params, opt = restored["params"], restored["opt"]
         print(f"[train] resumed from step {start}")
 
@@ -71,6 +98,7 @@ def main() -> None:
                        vocab=cfg.vocab_size, cfg=cfg, start_step=start)
     wd = StragglerWatchdog()
     t_start = time.time()
+    step, metrics = start - 1, {"loss": float("nan")}
     for _ in range(args.steps):
         step, batch = next(data)
         wd.start()

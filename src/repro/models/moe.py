@@ -151,10 +151,6 @@ def _apply_moe_shard_map(p, xf, topi, topv, cfg, wbits, abits, mesh, C_shard):
     ({"q": int8, "s": scales}) expert stacks: every 3-D leaf with a real
     middle axis is FSDP-sharded there (wg/wu on d, wd on f), scales
     (E,1,f) ride along replicated over dp."""
-    try:
-        from jax import shard_map
-    except ImportError:                                     # older jax
-        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     names = set(mesh.axis_names)
@@ -196,11 +192,11 @@ def _apply_moe_shard_map(p, xf, topi, topv, cfg, wbits, abits, mesh, C_shard):
     ex_specs = jax.tree.map(
         lambda l: P("model", dp, None) if _is_big(l)
         else P("model", None, None), ex)
-    return shard_map(
+    return dist.api.shard_map_compat(
         local, mesh=mesh,
         in_specs=(P(dp, None), P(dp, None), P(dp, None), ex_specs),
         out_specs=P(dp, None),
-        check_vma=False,
+        check=False,
     )(xf, topi, topv, ex)
 
 

@@ -13,13 +13,16 @@ accuracy *without touching compiled code* — tests assert zero retraces.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import dist
 from repro.core.policy import BudgetController, PrecisionPolicy
+from repro.dist import sharding as shd
 from repro.models import lm
 
 
@@ -33,8 +36,13 @@ class ServeStats:
 class ServeEngine:
     def __init__(self, cfg, qparams, *, max_len: int = 256,
                  controller: Optional[BudgetController] = None,
-                 policy: Optional[PrecisionPolicy] = None):
+                 policy: Optional[PrecisionPolicy] = None,
+                 mesh=None):
         self.cfg = cfg
+        self.mesh = mesh if mesh is not None else dist.active_mesh()
+        if self.mesh is not None:       # place serve weights once, sharded
+            qparams = jax.device_put(
+                qparams, shd.param_shardings(qparams, self.mesh))
         self.qparams = qparams
         self.max_len = max_len
         n = lm.n_bit_slots(cfg)
@@ -67,13 +75,26 @@ class ServeEngine:
     def _bits(self):
         return self.controller.resolve(self.budget_s)
 
+    def _mesh_ctx(self):
+        return (dist.use_mesh(self.mesh) if self.mesh is not None
+                else contextlib.nullcontext())
+
     def generate(self, batch: Dict[str, jnp.ndarray], steps: int
                  ) -> jnp.ndarray:
         """Greedy generation; returns (B, steps) generated ids."""
+        with self._mesh_ctx():
+            return self._generate(batch, steps)
+
+    def _generate(self, batch: Dict[str, jnp.ndarray], steps: int
+                  ) -> jnp.ndarray:
         B, S = batch["tokens"].shape
         prefix = self.cfg.n_prefix_tokens if self.cfg.family == "vlm" else 0
         wv, av = self._bits()
+        batch = shd.shard_batch(batch, self.mesh)
         cache = lm.empty_cache(self.cfg, B, self.max_len)
+        if self.mesh is not None:
+            cache = jax.device_put(cache, shd.cache_shardings(cache,
+                                                              self.mesh))
         logits, cache = self._prefill(self.qparams, batch, cache, wv, av)
         out = []
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]

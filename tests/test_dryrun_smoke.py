@@ -75,10 +75,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim.compress import compress_psum
-try:
-    from jax import shard_map
-except ImportError:
-    from jax.experimental.shard_map import shard_map
+from repro.dist.api import shard_map_compat
 
 mesh = jax.make_mesh((8,), ("pod",))
 rng = np.random.default_rng(0)
@@ -88,8 +85,8 @@ def step(g, e):
     avg, new_e = compress_psum({"w": g}, {"w": e}, "pod")
     return avg["w"], new_e["w"]
 
-f = shard_map(step, mesh=mesh, in_specs=(P("pod"), P("pod")),
-              out_specs=(P("pod"), P("pod")), check_vma=False)
+f = shard_map_compat(step, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                     out_specs=(P("pod"), P("pod")), check=False)
 
 e = jnp.zeros_like(g_all)
 total_err = []

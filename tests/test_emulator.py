@@ -1,7 +1,10 @@
 """AP emulator: bit-exactness of LUT passes + Table I pass-count fidelity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.apsim import costmodel as cm
 from repro.core import emulator as em
