@@ -28,7 +28,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (calibrate, fig5_runtimes, fig6_technology,
                             fig7_dse, fig8_breakdown, roofline,
-                            table7_bitfluid, table8_sota)
+                            serve_throughput, table7_bitfluid, table8_sota)
     mods = [
         ("calibrate", calibrate),
         ("fig5_runtimes", fig5_runtimes),
@@ -37,6 +37,7 @@ def main(argv=None) -> int:
         ("fig8_breakdown", fig8_breakdown),
         ("table7_bitfluid", table7_bitfluid),
         ("table8_sota", table8_sota),
+        ("serve_throughput", serve_throughput),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))
@@ -54,6 +55,9 @@ def main(argv=None) -> int:
         dt = time.time() - t0
         print(f"[{name}] rc={rc} ({dt:.1f}s)")
         record[name] = {"rc": int(rc or 0), "seconds": round(dt, 3)}
+        metrics = getattr(mod, "LAST_RESULTS", None)
+        if metrics:                     # modules may export a metric dict
+            record[name]["metrics"] = metrics
         if rc:
             failed.append(name)
     print(f"\n==== benchmarks summary: "

@@ -116,12 +116,17 @@ def multiply(A: np.ndarray, B: np.ndarray, counter: PassCounter
 
 
 def relu(V: np.ndarray, counter: PassCounter) -> np.ndarray:
-    """Table III: stash MSB in flag, reset it, zero bits where flag set."""
+    """Table III: stash MSB in flag, reset it, zero bits where flag set.
+
+    Pass accounting (cross-checked in tests/test_emulator.py): the flag
+    stash is one read, the MSB reset is one write (counted by ``_write``
+    itself), and each of the M-1 remaining bits is one compare + one
+    write — 2M passes total, matching Table I's 4M+1 ReLU cycles minus
+    the 2M populate and 1 read-out I/O passes."""
     L, M = V.shape
     F = V[:, -1].copy()
     counter.reads += 1
     _write((V[:, -1],), (0,), np.ones(L, bool), counter)
-    counter.writes += 1                     # flag column write
     for i in range(M - 1):
         col = V[:, i]
         tag = _compare((col, F), (1, 1), counter)

@@ -104,16 +104,24 @@ class BudgetController:
         return jnp.stack(ws), jnp.stack(as_)
 
     def select(self, budget_s) -> jnp.ndarray:
-        """Runtime index into stacked_tables() given a latency budget scalar."""
+        """Runtime index into stacked_tables() given a latency budget.
+
+        ``budget_s`` may be a scalar (whole-batch budget) or a ``(B,)``
+        vector (per-request budgets); the result matches its shape.  Pure
+        jnp — budgets are *data*, so per-request precision never retraces.
+        """
         lats = jnp.asarray([self.predicted_latency_s[k] for k in self.order()],
                            jnp.float32)
-        fits = lats <= jnp.asarray(budget_s, jnp.float32)
+        b = jnp.asarray(budget_s, jnp.float32)
+        fits = lats <= b[..., None]                  # (..., n_configs)
         # last (slowest/most accurate) fitting config, else index 0 (fastest)
-        idx = jnp.where(jnp.any(fits), jnp.max(jnp.where(
-            fits, jnp.arange(lats.shape[0]), -1)), 0)
-        return idx.astype(jnp.int32)
+        best = jnp.max(jnp.where(fits, jnp.arange(lats.shape[0]), -1), axis=-1)
+        return jnp.maximum(best, 0).astype(jnp.int32)
 
     def resolve(self, budget_s) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(wbits, abits) tables for ``budget_s``: ``(n_layers,)`` for a
+        scalar budget, ``(B, n_layers)`` for a ``(B,)`` budget vector.
+        The gather is the whole "switch" — zero-retrace by construction."""
         wtab, atab = self.stacked_tables()
         idx = self.select(budget_s)
         return wtab[idx], atab[idx]

@@ -181,6 +181,12 @@ def _cache_leaf_spec(mesh, keys: Tuple[str, ...], leaf) -> P:
     shape = leaf.shape
     if name in ("k", "v") and leaf.ndim == 5:
         return _kv_cache_spec(mesh, shape)
+    if name == "kpos" and leaf.ndim == 3:           # (L, B, Sc) per-row
+        L, B, Sc = shape                            # positions follow the
+        dp_sz = api.dp_size(mesh)                   # k/v batch placement
+        if dp_sz > 1 and B % dp_sz == 0:
+            return P(None, _axis_entry(api.mesh_axes_for(mesh, "dp")), None)
+        return P(None, None, None)
     if name in ("ks", "vs") and leaf.ndim == 4:     # int8 cache scales:
         full = _kv_cache_spec(mesh, shape + (1,))   # (L, B, S, KV) = k/v
         return P(*tuple(full)[:4])                  # minus the head dim

@@ -1,8 +1,18 @@
-"""Serving driver: load/initialize a model, quantize, serve batched
-requests with runtime latency budgets (dynamic bit fluidity).
+"""Serving driver: load/initialize a model, quantize, and serve requests
+with runtime latency budgets (dynamic bit fluidity).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \\
-      --requests 4 --steps 16 --budgets 2.0 0.5
+Two modes:
+
+  * ``--continuous`` (default): the continuous-batching engine — every
+    request carries its OWN budget (cycled from ``--budgets``) and streams
+    through a persistent slot pool; one compiled prefill + one compiled
+    decode serve all precision mixes.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --smoke \\
+          --requests 8 --steps 16 --budgets 2.0 0.75 0.5
+
+  * ``--batch``: the legacy whole-batch path (one budget per batch);
+    kept for A/B comparison and the paper's §V.B batch-switch story.
 
 With ``--ckpt-dir`` it restores trained weights (from launch/train.py)
 before quantizing — train -> checkpoint -> quantized bit-fluid serving is
@@ -15,6 +25,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.core import policy as pol
@@ -24,18 +35,35 @@ from repro.serve.engine import ServeEngine
 from repro.train.checkpoint import latest_step, restore_checkpoint
 
 
+def default_controller(n: int) -> pol.BudgetController:
+    return pol.BudgetController(
+        {"int4": pol.fixed(4), "mixed": pol.per_layer([8, 4], name="mixed"),
+         "int8": pol.fixed(8)},
+        {"int4": 0.5, "mixed": 0.75, "int8": 1.0}, n)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3_4b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching mode (the default)")
+    ap.add_argument("--batch", action="store_true",
+                    help="legacy whole-batch mode (one budget per batch)")
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--decode-block", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--budgets", type=float, nargs="+", default=[2.0, 0.5])
     ap.add_argument("--kv-bits", type=int, default=0, choices=(0, 8))
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
+    if args.continuous and args.batch:
+        ap.error("--continuous and --batch are mutually exclusive")
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))
@@ -50,22 +78,53 @@ def main() -> None:
         print(f"[serve] restored weights from step {step}")
     qparams = lm.quantize_params(params, cfg)
 
-    n = lm.n_bit_slots(cfg)
-    ctrl = pol.BudgetController(
-        {"int4": pol.fixed(4), "mixed": pol.per_layer([8, 4], name="mixed"),
-         "int8": pol.fixed(8)},
-        {"int4": 0.5, "mixed": 0.75, "int8": 1.0}, n)
-    eng = ServeEngine(cfg, qparams, max_len=args.max_len, controller=ctrl)
+    ctrl = default_controller(lm.n_bit_slots(cfg))
+    if args.batch:
+        _serve_batches(cfg, qparams, ctrl, args)
+    else:
+        _serve_continuous(cfg, qparams, ctrl, args)
 
+
+def _serve_continuous(cfg, qparams, ctrl, args) -> None:
+    eng = ServeEngine(cfg, qparams, max_len=args.max_len, controller=ctrl,
+                      n_slots=args.n_slots, prefill_len=args.prompt_len,
+                      decode_block=args.decode_block)
+    t0 = time.time()
+    rids = []
+    for i in range(args.requests):
+        prompt = make_batch(7, i, 1, args.prompt_len,
+                            cfg.vocab_size)["tokens"][0]
+        rids.append(eng.submit(np.asarray(prompt),
+                               max_new_tokens=args.steps,
+                               budget_s=args.budgets[i % len(args.budgets)],
+                               temperature=args.temperature,
+                               top_k=args.top_k))
+    res = eng.run()
+    dt = time.time() - t0
+    for rid in rids:
+        st = res[rid]
+        print(f"[serve] req{rid}: budget={st.budget_s:g}s -> "
+              f"{st.mean_wbits:.1f} mean wbits, {st.n_tokens} tokens "
+              f"(slot {st.slot}, {st.finished_s - st.submitted_s:.2f}s)")
+    print(f"[serve] {eng.stats.tokens} tokens in {dt:.2f}s "
+          f"({eng.stats.tokens / dt:.1f} tok/s) across "
+          f"{args.requests} requests on {args.n_slots} slots")
+    print(f"[serve] compiled programs: prefill={eng.stats.prefill_traces} "
+          f"decode={eng.stats.decode_traces} (fluid across "
+          f"{len(set(args.budgets))} budget levels, "
+          f"{eng.stats.admitted} admissions)")
+
+
+def _serve_batches(cfg, qparams, ctrl, args) -> None:
+    eng = ServeEngine(cfg, qparams, max_len=args.max_len, controller=ctrl)
     for bi, budget in enumerate(args.budgets):
         eng.set_budget(budget)
         batch = {"tokens": make_batch(7, bi, args.requests, args.prompt_len,
                                       cfg.vocab_size)["tokens"]}
         t0 = time.time()
-        out = eng.generate(batch, steps=args.steps)
+        eng.generate(batch, steps=args.steps)
         dt = time.time() - t0
         wv, _ = ctrl.resolve(jnp.asarray(budget))
-        import numpy as np
         print(f"[serve] budget={budget}: mean_bits="
               f"{float(np.mean(np.asarray(wv))):.1f} "
               f"{args.requests * args.steps} tokens in {dt:.2f}s "

@@ -58,7 +58,26 @@ def quantize_linear(p: dict, container: str = "int8") -> dict:
 # ---------------------------------------------------------------------------
 
 def apply_linear(p: dict, x: jnp.ndarray, wbits=8, abits=8) -> jnp.ndarray:
-    """y = x @ W (+b) at runtime precisions; dispatches train/serve forms."""
+    """y = x @ W (+b) at runtime precisions; dispatches train/serve forms.
+
+    ``wbits``/``abits`` are scalars (shared precision — the fast path) or
+    ``(B,)`` vectors matching ``x``'s leading axis (per-request precision:
+    serving batches whose rows carry different latency budgets).  The
+    vector path vmaps the scalar kernel over rows, so each row quantizes
+    weights AND activations at its own bit-width; rows are numerically
+    independent of their batch-mates (DESIGN.md §6).
+    """
+    if getattr(wbits, "ndim", 0) >= 1 or getattr(abits, "ndim", 0) >= 1:
+        B = x.shape[0]
+        wb = jnp.broadcast_to(jnp.asarray(wbits, jnp.int32), (B,))
+        ab = jnp.broadcast_to(jnp.asarray(abits, jnp.int32), (B,))
+        return jax.vmap(lambda xr, w, a: _apply_linear1(p, xr, w, a))(
+            x, wb, ab)
+    return _apply_linear1(p, x, wbits, abits)
+
+
+def _apply_linear1(p: dict, x: jnp.ndarray, wbits, abits) -> jnp.ndarray:
+    """Scalar-bits linear kernel (see apply_linear)."""
     if "w" in p:                                     # train: fake-quant STE
         # stay bf16 END-TO-END around the dot (fake_quant rounds in f32
         # internally but preserves input dtype): both the forward TP
@@ -156,4 +175,19 @@ def causal_mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
     visible = k_pos[None, :] <= q_pos[:, None]
     if window:
         visible &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(visible, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def causal_mask_bias_batched(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                             window: int = 0) -> jnp.ndarray:
+    """Per-row additive bias (B, Sq, Sk) from per-row positions (B, S).
+
+    Used when rows carry different valid lengths (continuous-batching
+    prefill): padded tokens sit at ``EMPTY_POS`` (a huge positive
+    sentinel), so real queries never see them, while padded queries still
+    see the padded keys — their softmax stays finite and their outputs
+    are discarded by the length-indexed logits gather."""
+    visible = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        visible &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
     return jnp.where(visible, 0.0, -jnp.inf).astype(jnp.float32)

@@ -1,16 +1,24 @@
 """LM wiring: embeddings, per-family stacks, loss, prefill/decode, and the
 train/serve parameter forms.
 
-Public API (all pure functions):
+Public API (all pure functions, plus the stateful CachePool):
   init_params(cfg, key)                      -> train-form pytree (bf16)
   quantize_params(params, cfg, container)    -> serve-form (int8/int4 + scales)
   train_loss(params, batch, cfg, wvec, avec) -> (loss, metrics)
-  prefill(params, batch, cfg, wvec, avec, cache) -> (last_logits, cache)
+  prefill(params, batch, cfg, wvec, avec, cache, lengths=None)
+                                             -> (last_logits, cache)
   decode_step(params, tok, t, cache, cfg, wvec, avec) -> (logits, cache)
   empty_cache(cfg, batch, max_len)           -> family-specific cache pytree
+  CachePool(cfg, n_slots, max_len)           -> slot-based persistent cache
+                                                (alloc / free / reset_slot)
 
-``wvec``/``avec`` are per-layer bit vectors (runtime tensors — core/policy);
-per-family semantics documented in DESIGN.md §4.
+``wvec``/``avec`` are per-layer bit vectors (runtime tensors — core/policy):
+``(n_layers,)`` shared across the batch, or ``(B, n_layers)`` matrices for
+per-request precision (families in PER_ROW_BIT_FAMILIES only); per-family
+semantics documented in DESIGN.md §4, serving semantics in §6.
+``t`` in decode_step is a scalar (lock-step batch) or ``(B,)`` vector
+(per-row positions — continuous batching).  ``lengths`` in prefill marks
+per-row valid prompt lengths; padded positions are masked via EMPTY_POS.
 """
 from __future__ import annotations
 
@@ -18,6 +26,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import dist
 from repro.models import common as cm
@@ -25,6 +34,14 @@ from repro.models import encdec, hybrid, mamba2, moe, transformer as tf
 from repro.models.config import ModelConfig
 
 MOE_AUX_COEF = 0.01
+
+# Families whose layer stacks accept (B, n_layers) per-request bit
+# matrices.  MoE resolves a *per-expert* axis instead (DESIGN.md §4);
+# hybrid shares one attention block batch-wide; encdec shares the encoder.
+PER_ROW_BIT_FAMILIES = ("dense", "vlm", "ssm")
+# Families whose prefill supports ragged per-row prompt lengths (attention
+# masks padding out; SSM recurrences would consume the pad tokens).
+RAGGED_PREFILL_FAMILIES = ("dense", "vlm")
 
 
 # ---------------------------------------------------------------------------
@@ -177,10 +194,26 @@ def _ssm_stack(layers, x, cfg, wvec, avec, cache=None):
     return x, None, jnp.zeros((), jnp.float32)
 
 
+def _layer_major(vec, family: str):
+    """Normalize a bit table for the layer scan: (L,) stays; a per-request
+    (B, L) matrix transposes to (L, B) so each scanned layer sees a (B,)
+    per-row bit vector (the apply_linear vmap path)."""
+    v = jnp.asarray(vec)
+    if v.ndim == 2:
+        if family not in PER_ROW_BIT_FAMILIES:
+            raise NotImplementedError(
+                f"per-request (B, n_layers) bit matrices are not supported "
+                f"for family {family!r} (see DESIGN.md §4)")
+        return v.T
+    return v
+
+
 def forward_hidden(params, x, cfg: ModelConfig, wvec, avec, *, positions,
                    cache=None, t=None, enc_out=None):
     """Embedded inputs -> final hidden states.  Returns (h, cache, aux)."""
     fam = cfg.family
+    wvec = _layer_major(wvec, fam)
+    avec = _layer_major(avec, fam)
     if fam in ("dense", "vlm"):
         return _dense_stack(params["layers"], x, cfg, wvec, avec, positions,
                             cache, t)
@@ -266,7 +299,8 @@ def train_loss(params, batch: dict, cfg: ModelConfig, wvec, avec
                                  (B, x.shape[1]))
     h, _, aux = forward_hidden(params, x, cfg, wvec, avec,
                                positions=positions, enc_out=enc_out)
-    logits = logits_fn(params, h, cfg, wvec[-1], avec[-1])
+    logits = logits_fn(params, h, cfg, _last_layer_bits(wvec),
+                       _last_layer_bits(avec))
     logits = dist.constrain(logits, ("dp", None, "tp"))
     loss, zloss = _xent(logits, tgt, mask)
     total = loss + 1e-4 * zloss + MOE_AUX_COEF * aux
@@ -298,34 +332,150 @@ def empty_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     raise ValueError(cfg.family)
 
 
-def prefill(params, batch: dict, cfg: ModelConfig, wvec, avec, cache: dict
-            ) -> Tuple[jnp.ndarray, dict]:
-    """Full-context forward filling ``cache``; returns last-token logits."""
+def _last_layer_bits(vec):
+    """Bits for the head GEMM: scalar for (L,) tables, (B,) for (B, L)."""
+    return jnp.asarray(vec)[..., -1]
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, wvec, avec, cache: dict,
+            lengths=None) -> Tuple[jnp.ndarray, dict]:
+    """Full-context forward filling ``cache``; returns last-token logits.
+
+    ``lengths`` (B,) marks per-row valid prompt lengths for right-padded
+    batches (continuous batching): padded positions take EMPTY_POS (never
+    visible to real queries, never visible in the cache), and the returned
+    logits are gathered at each row's own last real token."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = embed(params, tokens)
     enc_out = None
+    prefix_len = 0
     if cfg.family == "vlm":
+        prefix_len = batch["prefix"].shape[1]
         x = jnp.concatenate([batch["prefix"].astype(cm.DTYPE), x], axis=1)
     elif cfg.family == "encdec":
         enc_out = encdec.encode(params["layers"], batch["frames"].astype(cm.DTYPE),
                                 cfg, wvec, avec)
         cache = {"self": cache["self"]}        # cross is rebuilt from enc_out
-    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], (B, x.shape[1]))
+    Sx = x.shape[1]
+    if lengths is None:
+        # (1, Sx): rows share positions, so attention keeps its shared
+        # (S, S) mask instead of materializing a (B, S, S) batched one
+        positions = jnp.arange(Sx, dtype=jnp.int32)[None]
+    else:
+        if cfg.family not in RAGGED_PREFILL_FAMILIES:
+            raise NotImplementedError(
+                f"ragged (per-row lengths) prefill is not supported for "
+                f"family {cfg.family!r} (see DESIGN.md §6)")
+        if Sx > tf.FLASH_THRESHOLD:
+            raise NotImplementedError(
+                "ragged prefill uses the masked-SDPA path; keep the padded "
+                f"prompt length <= {tf.FLASH_THRESHOLD}")
+        lens = jnp.asarray(lengths, jnp.int32).reshape(B) + prefix_len
+        pos = jnp.arange(Sx, dtype=jnp.int32)[None]
+        valid = pos < lens[:, None]                       # (B, Sx)
+        positions = jnp.where(valid, pos, tf.EMPTY_POS)
+        # zero pad embeddings so per-row dynamic activation scales see only
+        # real tokens (keeps ragged rows numerically close to standalone)
+        x = jnp.where(valid[..., None], x, 0).astype(x.dtype)
     h, new_cache, _ = forward_hidden(params, x, cfg, wvec, avec,
                                      positions=positions, cache=cache,
                                      enc_out=enc_out)
-    return logits_fn(params, h[:, -1:], cfg, wvec[-1], avec[-1]), new_cache
+    if lengths is None:
+        h_last = h[:, -1:]
+    else:
+        idx = jnp.maximum(lens - 1, 0)[:, None, None]
+        h_last = jnp.take_along_axis(h, idx, axis=1)
+    return (logits_fn(params, h_last, cfg, _last_layer_bits(wvec),
+                      _last_layer_bits(avec)), new_cache)
 
 
 def decode_step(params, tok: jnp.ndarray, t, cache: dict, cfg: ModelConfig,
                 wvec, avec) -> Tuple[jnp.ndarray, dict]:
-    """One decode step: tok (B, 1) int32, t scalar position. Returns
-    (logits (B, 1, V), new_cache)."""
+    """One decode step: tok (B, 1) int32, t scalar or (B,) positions.
+    Returns (logits (B, 1, V), new_cache)."""
     B = tok.shape[0]
     x = embed(params, tok)
     t = jnp.asarray(t, jnp.int32)
-    positions = jnp.broadcast_to(t[None, None], (B, 1))
+    positions = jnp.broadcast_to(t, (B,))[:, None]        # (B, 1)
     h, new_cache, _ = forward_hidden(params, x, cfg, wvec, avec,
                                      positions=positions, cache=cache, t=t)
-    return logits_fn(params, h, cfg, wvec[-1], avec[-1]), new_cache
+    return (logits_fn(params, h, cfg, _last_layer_bits(wvec),
+                      _last_layer_bits(avec)), new_cache)
+
+
+# ---------------------------------------------------------------------------
+# Slot-based persistent cache pool (continuous batching)
+# ---------------------------------------------------------------------------
+
+class CachePool:
+    """A persistent, slot-based KV/SSM cache for continuous batching.
+
+    The pool owns ONE device cache pytree of batch capacity ``n_slots``
+    that lives across requests: ``alloc()`` hands out a free slot,
+    ``write_row`` installs a freshly prefilled single-row cache into it
+    (a traced-index dynamic_update_slice — slot churn never retraces),
+    ``free``/``reset_slot`` recycle it.  Per-slot valid lengths live
+    host-side in ``lengths``; visibility inside attention is carried by
+    the per-row ``kpos`` columns, so a reset slot is invisible by
+    construction (EMPTY_POS) rather than by zeroing data.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 shardings=None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = empty_cache(cfg, n_slots, max_len)
+        if shardings is not None:
+            self.cache = jax.device_put(self.cache, shardings)
+        self.lengths = np.zeros((n_slots,), np.int64)
+        self._free = list(range(n_slots - 1, -1, -1))
+
+        def write_row(pool, row, slot):
+            return jax.tree.map(
+                lambda p, r: jax.lax.dynamic_update_slice(
+                    p, r.astype(p.dtype),
+                    (0, slot) + (0,) * (p.ndim - 2)),
+                pool, row)
+
+        def reset_row(pool, slot):
+            def leaf(p, path):
+                if path and path[-1] == "kpos":
+                    empty = jnp.full((p.shape[0], 1) + p.shape[2:],
+                                     tf.EMPTY_POS, p.dtype)
+                    return jax.lax.dynamic_update_slice(
+                        p, empty, (0, slot) + (0,) * (p.ndim - 2))
+                return p
+            return jax.tree_util.tree_map_with_path(
+                lambda path, p: leaf(p, tuple(
+                    str(getattr(k, "key", k)) for k in path)), pool)
+
+        self._write = jax.jit(write_row, donate_argnums=(0,))
+        self._reset = jax.jit(reset_row, donate_argnums=(0,))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a free slot (None when the pool is full)."""
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        """Return a slot to the pool and mask its cache row."""
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        self.reset_slot(slot)
+        self._free.append(slot)
+
+    def reset_slot(self, slot: int) -> None:
+        """Mask a slot's cache row (kpos -> EMPTY_POS) and zero its length."""
+        self.lengths[slot] = 0
+        self.cache = self._reset(self.cache, jnp.asarray(slot, jnp.int32))
+
+    def write_row(self, row_cache, slot: int, length: int) -> None:
+        """Install a prefilled single-row cache into ``slot``."""
+        self.lengths[slot] = length
+        self.cache = self._write(self.cache, row_cache,
+                                 jnp.asarray(slot, jnp.int32))

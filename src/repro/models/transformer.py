@@ -7,12 +7,16 @@ bit-fluid mixed precision in both train (fake-quant STE) and serve (integer
 container) modes.
 
 Cache convention (per layer):
-  {"k": (B, Sc, KV, hd), "v": (B, Sc, KV, hd), "kpos": (Sc,) int32}
+  {"k": (B, Sc, KV, hd), "v": (B, Sc, KV, hd), "kpos": (B, Sc) int32}
 ``Sc`` is the cache capacity — ``min(max_len, window)`` for sliding-window
 models, so a 500k-token starcoder2 decode keeps a 4k ring buffer.  Slot
-``t % Sc`` is overwritten at step t; ``kpos`` records the absolute position
-held by each slot (-2^30 = empty) and drives the visibility mask, which
-makes full-window and ring-buffer attention the same code path.
+``t % Sc`` is overwritten at step t; ``kpos`` records, *per batch row*,
+the absolute position held by each slot (``EMPTY_POS`` = +2^30 = empty /
+padded — never visible, since visibility is ``kpos <= t``) and drives the
+visibility mask, which makes full-window, ring-buffer, and per-row
+continuous-batching attention the same code path.  ``t`` may be a scalar
+(lock-step batch) or a ``(B,)`` vector (per-row decode positions for the
+slot pool in serve/engine.py).
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ import jax.numpy as jnp
 from repro import dist
 from repro.models import common as cm
 
-NEG_POS = -(2 ** 30)
+EMPTY_POS = 2 ** 30          # "no token here": fails kpos <= t forever
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +83,7 @@ def empty_cache(cfg, batch: int, max_len: int, n_layers: Optional[int] = None,
     L = n_layers if n_layers is not None else cfg.n_layers
     Sc = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     kv = (L, batch, Sc, cfg.n_kv_heads, cfg.head_dim)
-    out = {"kpos": jnp.full((L, Sc), NEG_POS, jnp.int32)}
+    out = {"kpos": jnp.full((L, batch, Sc), EMPTY_POS, jnp.int32)}
     if cfg.kv_cache_bits == 8:
         out.update({
             "k": jnp.zeros(kv, jnp.int8),
@@ -99,6 +103,15 @@ def _quant_heads(x: jnp.ndarray):
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127
                  ).astype(jnp.int8)
     return q, s[..., 0].astype(cm.DTYPE)
+
+
+def _row_insert(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Write ``new`` (B, 1, ...) into ``buf`` (B, Sc, ...) at per-row ring
+    slot ``slot`` (B,) — the continuous-batching cache insert, where each
+    row sits at its own decode position."""
+    return jax.vmap(lambda b, n, s: jax.lax.dynamic_update_slice(
+        b, n, (s,) + (0,) * (b.ndim - 1)))(buf, new, slot)
 
 
 def _sdpa_int8(q, kq, ks, vq, vs, bias, cfg):
@@ -268,28 +281,29 @@ def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
         q = dist.constrain_heads(q, 2, 3, use_head)
         k_new = dist.constrain_heads(k_new, 2, 3, use_head)
         v_new = dist.constrain_heads(v_new, 2, 3, use_head)
+        B = x.shape[0]
         Sc = cache["k"].shape[1]
-        slot = (t % Sc).astype(jnp.int32)
-        kpos = jax.lax.dynamic_update_slice(cache["kpos"], t[None], (slot,))
-        visible = kpos[None, :] <= positions[:, -1:]     # (B, Sc)
+        t_b = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+        slot = (t_b % Sc).astype(jnp.int32)
+        kpos = jax.vmap(lambda kp, tv, sl: jax.lax.dynamic_update_slice(
+            kp, tv[None], (sl,)))(cache["kpos"], t_b, slot)
+        visible = kpos <= positions[:, -1:]              # (B, Sc)
         if cfg.sliding_window:
-            visible &= kpos[None, :] > positions[:, -1:] - cfg.sliding_window
+            visible &= kpos > positions[:, -1:] - cfg.sliding_window
         bias = jnp.where(visible, 0.0, -jnp.inf)[:, None, :].astype(jnp.float32)
-        bias = bias.reshape(x.shape[0], 1, Sc)           # (B, Sq=1, Sc)
+        bias = bias.reshape(B, 1, Sc)                    # (B, Sq=1, Sc)
         if "ks" in cache:                                # int8 cache path
             kq_n, ks_n = _quant_heads(k_new)
             vq_n, vs_n = _quant_heads(v_new)
-            k = jax.lax.dynamic_update_slice(cache["k"], kq_n, (0, slot, 0, 0))
-            v = jax.lax.dynamic_update_slice(cache["v"], vq_n, (0, slot, 0, 0))
-            ks = jax.lax.dynamic_update_slice(cache["ks"], ks_n, (0, slot, 0))
-            vs = jax.lax.dynamic_update_slice(cache["vs"], vs_n, (0, slot, 0))
+            k = _row_insert(cache["k"], kq_n, slot)
+            v = _row_insert(cache["v"], vq_n, slot)
+            ks = _row_insert(cache["ks"], ks_n, slot)
+            vs = _row_insert(cache["vs"], vs_n, slot)
             new_cache = {"k": k, "v": v, "ks": ks, "vs": vs, "kpos": kpos}
             out = _sdpa_int8(q, k, ks, v, vs, bias, cfg)
         else:
-            k = jax.lax.dynamic_update_slice(cache["k"], k_new,
-                                             (0, slot, 0, 0))
-            v = jax.lax.dynamic_update_slice(cache["v"], v_new,
-                                             (0, slot, 0, 0))
+            k = _row_insert(cache["k"], k_new, slot)
+            v = _row_insert(cache["v"], v_new, slot)
             new_cache = {"k": k, "v": v, "kpos": kpos}
             out = _sdpa(q, k, v, bias, cfg)
     else:                                                # full sequence
@@ -297,6 +311,14 @@ def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
         k, v = k_new, v_new
         if x.shape[1] > FLASH_THRESHOLD:
             out = _flash_sdpa(q, k, v, pos1, pos1, cfg, causal=causal)
+        elif causal and cache is not None and positions.shape[0] > 1:
+            # ragged serving prefill: rows carry different valid lengths
+            # (padded positions == EMPTY_POS), so the mask is per-row;
+            # lock-step prefill passes (1, S) positions and keeps the
+            # shared (S, S) mask below
+            bias = cm.causal_mask_bias_batched(positions, positions,
+                                               cfg.sliding_window)
+            out = _sdpa(q, k, v, bias, cfg)
         else:
             bias = (cm.causal_mask_bias(pos1, pos1, cfg.sliding_window)
                     if causal
@@ -311,15 +333,32 @@ def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
 
 def prefill_cache_insert(cache_layer: dict, k: jnp.ndarray, v: jnp.ndarray,
                          positions: jnp.ndarray) -> dict:
-    """Write a full prefill's k/v (B,S,KV,hd) into a fresh layer cache."""
+    """Write a full prefill's k/v (B,S,KV,hd) into a fresh layer cache.
+
+    ``positions`` (B, S) or (1, S) may differ per row: padded tokens at
+    EMPTY_POS land in the cache as EMPTY_POS slots, which the decode
+    visibility mask (kpos <= t) never exposes — padding is masked, not
+    special-cased.  When the prompt buffer exceeds the ring capacity,
+    each row keeps its own last ``Sc`` *valid* tokens (a per-row gather —
+    a uniform tail slice would keep only padding for short rows)."""
     Sc = cache_layer["k"].shape[1]
-    S = k.shape[1]
+    B, S = k.shape[0], k.shape[1]
     keep = min(S, Sc)
-    kpos = jax.lax.dynamic_update_slice(
-        cache_layer["kpos"], positions[0, S - keep:].astype(jnp.int32), (0,))
+    positions = jnp.broadcast_to(positions, (B, S)).astype(jnp.int32)
+    if keep == S:                                        # whole buffer fits
+        kpos_new, k_keep, v_keep = positions, k, v
+    else:
+        n_valid = jnp.sum(positions < EMPTY_POS, axis=1)        # (B,)
+        shift = jnp.maximum(n_valid - keep, 0)                  # (B,)
+        idx = jnp.minimum(shift[:, None] + jnp.arange(keep)[None], S - 1)
+        kpos_new = jnp.take_along_axis(positions, idx, axis=1)
+        k_keep = jnp.take_along_axis(k, idx[..., None, None], axis=1)
+        v_keep = jnp.take_along_axis(v, idx[..., None, None], axis=1)
+    kpos = jax.lax.dynamic_update_slice(cache_layer["kpos"], kpos_new,
+                                        (0, 0))
     if "ks" in cache_layer:                              # int8 cache
-        kq, ks = _quant_heads(k[:, S - keep:])
-        vq, vs = _quant_heads(v[:, S - keep:])
+        kq, ks = _quant_heads(k_keep)
+        vq, vs = _quant_heads(v_keep)
         return {
             "k": jax.lax.dynamic_update_slice(cache_layer["k"], kq,
                                               (0, 0, 0, 0)),
@@ -332,9 +371,9 @@ def prefill_cache_insert(cache_layer: dict, k: jnp.ndarray, v: jnp.ndarray,
             "kpos": kpos,
         }
     ck = jax.lax.dynamic_update_slice(
-        cache_layer["k"], k[:, S - keep:], (0, 0, 0, 0))
+        cache_layer["k"], k_keep, (0, 0, 0, 0))
     cv = jax.lax.dynamic_update_slice(
-        cache_layer["v"], v[:, S - keep:], (0, 0, 0, 0))
+        cache_layer["v"], v_keep, (0, 0, 0, 0))
     return {"k": ck, "v": cv, "kpos": kpos}
 
 

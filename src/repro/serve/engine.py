@@ -1,43 +1,133 @@
-"""Batched serving engine with runtime bit fluidity.
+"""Continuous-batching serving engine with per-request bit fluidity.
 
 One compiled prefill + one compiled decode program serve every precision
-configuration: the per-layer bit vectors are *inputs*, selected per batch
-by a :class:`repro.core.policy.BudgetController` from a latency budget —
-the TPU realization of the paper's §V.B dynamic mixed-precision claim
-("switching between the three mixed-precision configurations dynamically,
-as imposed by the changing run-time resource requirements").
+configuration AND every mix of configurations across a batch: each
+request carries its own latency budget, resolved by a
+:class:`repro.core.policy.BudgetController` into a per-layer bit vector,
+and the batch's ``(B, n_layers)`` bit *matrix* is an ordinary traced
+input — the TPU realization of the paper's §V.B dynamic mixed-precision
+claim ("switching between the three mixed-precision configurations
+dynamically, as imposed by the changing run-time resource requirements"),
+now at request granularity (cf. LRMP, arXiv:2312.03146).
 
-The engine is deliberately simple (static batch, greedy sampling): the
-interesting part is that ``set_budget()`` between batches changes cost/
-accuracy *without touching compiled code* — tests assert zero retraces.
+Architecture (DESIGN.md §6):
+
+  * ``submit()`` enqueues requests (prompt, latency budget, sampling
+    params); a scheduler admits them into free slots of a persistent
+    :class:`repro.models.lm.CachePool` as earlier requests complete
+    (continuous batching — no batch barrier).
+  * prefill runs per admitted request on a fixed ``(1, prefill_len)``
+    shape (right-padded, EMPTY_POS-masked), its cache row installed into
+    the pool by a traced-index write — slot churn never retraces.
+  * decode is scan-fused: ``decode_block`` tokens per dispatch via
+    ``lax.scan`` over (decode_step -> sample), with per-row positions,
+    per-row bits, and per-row sampling (greedy / temperature / top-k).
+  * ``ServeStats`` counts traces; tests assert both programs compile
+    exactly once across budget changes, slot reuse, and admission churn.
+
+The legacy whole-batch API (``set_budget``/``generate``) is kept — it now
+accepts a per-request budget *vector* and runs the same scan-fused decode
+(``fused=False`` preserves the old per-token Python loop for the
+benchmark baseline in benchmarks/serve_throughput.py).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
-from typing import Dict, Optional
+import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import dist
 from repro.core.policy import BudgetController, PrecisionPolicy
 from repro.dist import sharding as shd
 from repro.models import lm
 
+TOPK_MAX = 64          # static top-k sort width; per-row k <= TOPK_MAX
+
 
 @dataclasses.dataclass
 class ServeStats:
+    """Engine-wide counters; trace counts prove zero-retrace serving."""
     prefill_traces: int = 0
     decode_traces: int = 0
     tokens: int = 0
+    admitted: int = 0
+    completed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """A queued generation request with its own budget + sampling params."""
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int
+    budget_s: float
+    temperature: float = 0.0
+    top_k: int = 0
+    prefix: Optional[np.ndarray] = None  # vlm: (n_prefix_tokens, d) stub
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request serving record (the per-request half of ServeStats)."""
+    rid: int
+    prompt_len: int
+    budget_s: float
+    mean_wbits: float                   # realized per-layer weight bits
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    submitted_s: float = 0.0
+    finished_s: float = 0.0
+    done: bool = False
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+
+def _sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
+                   top_k: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sampling: logits (B, V); temperature/top_k (B,).
+
+    temperature == 0 -> greedy; top_k > 0 masks all but the row's k best
+    logits (static TOPK_MAX sort width, per-row threshold gather)."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    K = min(TOPK_MAX, V)
+    vals, _ = jax.lax.top_k(logits, K)                       # (B, K)
+    kth = jnp.take_along_axis(vals, jnp.clip(top_k, 1, K)[:, None] - 1,
+                              axis=1)                        # (B, 1)
+    masked = jnp.where((top_k[:, None] > 0) & (logits < kth),
+                       -jnp.inf, logits)
+    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
 
 
 class ServeEngine:
+    """Continuous-batching, bit-fluid serving engine.
+
+    Two APIs share the compiled programs:
+
+      * whole-batch: ``set_budget(scalar | (B,) vector)`` +
+        ``generate(batch, steps)`` — one synchronous batch.
+      * continuous: ``submit(prompt, budget_s=..., ...) -> rid`` +
+        ``run()`` (or ``step()`` for manual pumping) — requests stream
+        through a persistent slot pool, each at its own precision.
+    """
+
     def __init__(self, cfg, qparams, *, max_len: int = 256,
                  controller: Optional[BudgetController] = None,
                  policy: Optional[PrecisionPolicy] = None,
-                 mesh=None):
+                 mesh=None, n_slots: int = 4, prefill_len: int = 32,
+                 decode_block: int = 8, eos_id: Optional[int] = None,
+                 seed: int = 0):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else dist.active_mesh()
         if self.mesh is not None:       # place serve weights once, sharded
@@ -45,7 +135,12 @@ class ServeEngine:
                 qparams, shd.param_shardings(qparams, self.mesh))
         self.qparams = qparams
         self.max_len = max_len
+        self.n_slots = n_slots
+        self.prefill_len = prefill_len
+        self.decode_block = decode_block
+        self.eos_id = eos_id
         n = lm.n_bit_slots(cfg)
+        self.n_layers = n
         if controller is not None:
             self.controller = controller
         else:
@@ -54,41 +149,112 @@ class ServeEngine:
                 {pol.name: pol}, {pol.name: 0.0}, n)
         self.budget_s = jnp.asarray(1e9, jnp.float32)
         self.stats = ServeStats()
+        self.row_bits = cfg.family in lm.PER_ROW_BIT_FAMILIES
+        self._key = jax.random.PRNGKey(seed)
 
-        def _prefill(q, batch, cache, wv, av):
+        # ---- continuous-batching state (pool built lazily on first submit)
+        self.pool: Optional[lm.CachePool] = None
+        self._queue: "collections.deque[Request]" = collections.deque()
+        self._next_rid = 0
+        self.requests: Dict[int, RequestStats] = {}
+        self._slot_req = np.full((n_slots,), -1, np.int64)   # slot -> rid
+        self._tok = np.zeros((n_slots,), np.int64)
+        self._t = np.zeros((n_slots,), np.int64)
+        self._budget = np.full((n_slots,), 1e9, np.float64)
+        self._temp = np.zeros((n_slots,), np.float64)
+        self._topk = np.zeros((n_slots,), np.int64)
+        self._remaining = np.zeros((n_slots,), np.int64)
+        self._just_finished: List[int] = []
+
+        # ---- compiled programs (each traces exactly once per shape)
+        def _prefill_batch(q, batch, cache, wv, av):
             self.stats.prefill_traces += 1
             return lm.prefill(q, batch, cfg, wv, av, cache)
 
-        def _decode(q, tok, t, cache, wv, av):
+        def _prefill_row(q, tokens, length, wv, av, *prefix):
+            self.stats.prefill_traces += 1
+            cache = lm.empty_cache(cfg, 1, max_len)
+            batch = {"tokens": tokens}
+            if prefix:                  # vlm: (1, n_prefix_tokens, d)
+                batch["prefix"] = prefix[0]
+            return lm.prefill(q, batch, cfg, wv, av, cache, lengths=length)
+
+        def _decode_scan(q, tok, t, cache, wv, av, temp, topk, keys):
             self.stats.decode_traces += 1
-            return lm.decode_step(q, tok, t, cache, cfg, wv, av)
 
-        self._prefill = jax.jit(_prefill, donate_argnums=(2,))
-        self._decode = jax.jit(_decode, donate_argnums=(3,))
+            def step(carry, key):
+                tok, t, cache = carry
+                logits, cache = lm.decode_step(q, tok, t, cache, cfg, wv, av)
+                nxt = _sample_tokens(logits[:, -1], key, temp, topk)
+                return (nxt[:, None], t + 1, cache), nxt
 
-    def set_budget(self, seconds: float) -> None:
-        """Runtime knob: tightens/loosens the per-batch latency budget.
-        Changes which precision config the controller resolves — pure
-        data, no recompilation."""
+            (tok, t, cache), toks = jax.lax.scan(step, (tok, t, cache), keys)
+            return tok, t, cache, jnp.moveaxis(toks, 0, 1)   # (B, steps)
+
+        def _decode_one(q, tok, t, cache, wv, av, temp, topk, key):
+            # per-token baseline (benchmarks) — same math, no scan fusion
+            self.stats.decode_traces += 1
+            logits, cache = lm.decode_step(q, tok, t, cache, cfg, wv, av)
+            nxt = _sample_tokens(logits[:, -1], key, temp, topk)
+            return nxt[:, None], t + 1, cache, nxt
+
+        def _sample_first(logits, key, temp, topk):
+            return _sample_tokens(logits[:, -1], key, temp, topk)
+
+        self._prefill = jax.jit(_prefill_batch, donate_argnums=(2,))
+        self._prefill_row = jax.jit(_prefill_row)
+        self._decode_scan = jax.jit(_decode_scan, donate_argnums=(3,))
+        self._decode_one = jax.jit(_decode_one, donate_argnums=(3,))
+        self._sample_first = jax.jit(_sample_first)
+
+    # ------------------------------------------------------------------
+    # Shared plumbing
+    # ------------------------------------------------------------------
+
+    def set_budget(self, seconds) -> None:
+        """Runtime knob: a scalar batch budget, or a (B,) per-request
+        budget vector — either way pure data, no recompilation."""
         self.budget_s = jnp.asarray(seconds, jnp.float32)
 
     def _bits(self):
-        return self.controller.resolve(self.budget_s)
+        wv, av = self.controller.resolve(self.budget_s)
+        if wv.ndim == 2 and not self.row_bits:
+            raise NotImplementedError(
+                f"per-request budgets need per-row bit support; family "
+                f"{self.cfg.family!r} serves whole-batch budgets only "
+                f"(supported: {lm.PER_ROW_BIT_FAMILIES})")
+        return wv, av
 
     def _mesh_ctx(self):
         return (dist.use_mesh(self.mesh) if self.mesh is not None
                 else contextlib.nullcontext())
 
-    def generate(self, batch: Dict[str, jnp.ndarray], steps: int
-                 ) -> jnp.ndarray:
-        """Greedy generation; returns (B, steps) generated ids."""
-        with self._mesh_ctx():
-            return self._generate(batch, steps)
+    def _split_key(self, num: int):
+        keys = jax.random.split(self._key, num + 1)
+        self._key = keys[0]
+        return keys[1:]
 
-    def _generate(self, batch: Dict[str, jnp.ndarray], steps: int
-                  ) -> jnp.ndarray:
+    # ------------------------------------------------------------------
+    # Whole-batch API (legacy-compatible, now scan-fused)
+    # ------------------------------------------------------------------
+
+    def generate(self, batch: Dict[str, jnp.ndarray], steps: int, *,
+                 temperature=None, top_k=None, fused: bool = True
+                 ) -> jnp.ndarray:
+        """Generate ``steps`` tokens for one synchronous batch; returns
+        (B, steps) ids.  Greedy unless per-row temperature/top_k given."""
+        with self._mesh_ctx():
+            return self._generate(batch, steps, temperature, top_k, fused)
+
+    def _generate(self, batch, steps, temperature, top_k, fused):
         B, S = batch["tokens"].shape
         prefix = self.cfg.n_prefix_tokens if self.cfg.family == "vlm" else 0
+        temp = jnp.zeros((B,), jnp.float32) if temperature is None else \
+            jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+        if top_k is not None and int(np.max(np.asarray(top_k))) > TOPK_MAX:
+            raise ValueError(f"top_k exceeds TOPK_MAX={TOPK_MAX}")
+        topk = jnp.zeros((B,), jnp.int32) if top_k is None else \
+            jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
         wv, av = self._bits()
         batch = shd.shard_batch(batch, self.mesh)
         cache = lm.empty_cache(self.cfg, B, self.max_len)
@@ -96,17 +262,204 @@ class ServeEngine:
             cache = jax.device_put(cache, shd.cache_shardings(cache,
                                                               self.mesh))
         logits, cache = self._prefill(self.qparams, batch, cache, wv, av)
-        out = []
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        t = S + prefix
-        for i in range(steps):
-            out.append(tok)
-            wv, av = self._bits()
-            logits, cache = self._decode(self.qparams, tok,
-                                         jnp.asarray(t + i), cache, wv, av)
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            self.stats.tokens += B
-        return jnp.concatenate(out, axis=1)
+        keys = self._split_key(steps)
+        tok = self._sample_first(logits, keys[0], temp, topk)[:, None]
+        t = jnp.full((B,), S + prefix, jnp.int32)
+        if fused:
+            _, _, cache, toks = self._decode_scan(
+                self.qparams, tok, t, cache, wv, av, temp, topk,
+                keys[1:steps])
+            out = jnp.concatenate([tok, toks], axis=1)
+        else:
+            out = [tok]
+            for i in range(steps - 1):
+                tok, t, cache, _ = self._decode_one(
+                    self.qparams, tok, t, cache, wv, av, temp, topk,
+                    keys[1 + i])
+                out.append(tok)
+            out = jnp.concatenate(out, axis=1)
+        self.stats.tokens += B * steps
+        return out
+
+    # ------------------------------------------------------------------
+    # Continuous-batching API
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, *, max_new_tokens: int = 16,
+               budget_s: Optional[float] = None, temperature: float = 0.0,
+               top_k: int = 0, prefix=None) -> int:
+        """Enqueue a request; returns its id.  ``budget_s`` picks this
+        request's precision configuration (None = loosest/most accurate).
+        vlm models require ``prefix`` (n_prefix_tokens, d_model)."""
+        if self.cfg.family not in lm.RAGGED_PREFILL_FAMILIES:
+            raise NotImplementedError(
+                f"the continuous-batching API needs ragged prefill; family "
+                f"{self.cfg.family!r} serves via generate() only "
+                f"(supported: {lm.RAGGED_PREFILL_FAMILIES})")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not 1 <= prompt.shape[0] <= self.prefill_len:
+            raise ValueError(f"prompt length {prompt.shape[0]} not in "
+                             f"[1, {self.prefill_len}]")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens={max_new_tokens} must be >= 1")
+        prefix_len = (self.cfg.n_prefix_tokens
+                      if self.cfg.family == "vlm" else 0)
+        if (prefix_len + self.prefill_len + max_new_tokens > self.max_len
+                and not self.cfg.sliding_window):
+            raise ValueError("prefix + prefill_len + max_new_tokens "
+                             "exceeds max_len (KV ring would wrap)")
+        if top_k > TOPK_MAX:
+            raise ValueError(f"top_k={top_k} exceeds TOPK_MAX={TOPK_MAX}")
+        if self.cfg.family == "vlm":
+            if prefix is None:
+                raise ValueError("vlm requests need a prefix "
+                                 "(n_prefix_tokens, d_model)")
+            prefix = np.asarray(prefix, np.float32)
+            if prefix.shape != (self.cfg.n_prefix_tokens, self.cfg.d_model):
+                raise ValueError(f"prefix shape {prefix.shape} != "
+                                 f"({self.cfg.n_prefix_tokens}, "
+                                 f"{self.cfg.d_model})")
+        budget = float(budget_s) if budget_s is not None else 1e9
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, prompt, max_new_tokens, budget,
+                                   float(temperature), int(top_k),
+                                   prefix=prefix))
+        self.requests[rid] = RequestStats(
+            rid=rid, prompt_len=int(prompt.shape[0]), budget_s=budget,
+            mean_wbits=0.0,             # realized at admission (_admit)
+            submitted_s=time.time())
+        return rid
+
+    def _ensure_pool(self) -> lm.CachePool:
+        if self.pool is None:
+            shardings = None
+            if self.mesh is not None:
+                proto = lm.empty_cache(self.cfg, self.n_slots, self.max_len)
+                shardings = shd.cache_shardings(proto, self.mesh)
+            self.pool = lm.CachePool(self.cfg, self.n_slots, self.max_len,
+                                     shardings=shardings)
+        return self.pool
+
+    def _admit(self) -> List[int]:
+        """Move queued requests into free pool slots (prefill + install)."""
+        pool = self._ensure_pool()
+        admitted = []
+        while self._queue and pool.free_slots:
+            req = self._queue.popleft()
+            slot = pool.alloc()
+            S = req.prompt.shape[0]
+            tokens = np.zeros((1, self.prefill_len), np.int32)
+            tokens[0, :S] = req.prompt
+            wv, av = self.controller.resolve(
+                jnp.asarray(req.budget_s, jnp.float32))
+            extra = (() if req.prefix is None
+                     else (jnp.asarray(req.prefix[None]),))
+            logits, row_cache = self._prefill_row(
+                self.qparams, jnp.asarray(tokens),
+                jnp.asarray([S], jnp.int32), wv, av, *extra)
+            prefix_len = (self.cfg.n_prefix_tokens
+                          if self.cfg.family == "vlm" else 0)
+            pool.write_row(row_cache, slot, S + prefix_len)
+            key = self._split_key(1)[0]
+            first = self._sample_first(
+                logits, key, jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([req.top_k], jnp.int32))
+            st = self.requests[req.rid]
+            st.slot = slot
+            st.mean_wbits = float(jnp.mean(wv.astype(jnp.float32)))
+            st.tokens.append(int(first[0]))
+            self.stats.tokens += 1
+            self.stats.admitted += 1
+            self._slot_req[slot] = req.rid
+            self._tok[slot] = int(first[0])
+            self._t[slot] = S + prefix_len
+            self._budget[slot] = req.budget_s
+            self._temp[slot] = req.temperature
+            self._topk[slot] = req.top_k
+            self._remaining[slot] = req.max_new_tokens - 1
+            admitted.append(req.rid)
+            if self._remaining[slot] <= 0 or (
+                    self.eos_id is not None
+                    and int(first[0]) == self.eos_id):
+                self._finish(slot)
+        return admitted
+
+    def _finish(self, slot: int) -> None:
+        rid = int(self._slot_req[slot])
+        st = self.requests[rid]
+        st.done = True
+        st.finished_s = time.time()
+        self.stats.completed += 1
+        self._slot_req[slot] = -1
+        self._remaining[slot] = 0
+        self.pool.free(slot)
+        self._just_finished.append(rid)
+
+    def step(self) -> List[int]:
+        """One scheduler tick: admit into free slots, decode one block,
+        harvest tokens, retire finished requests.  Returns the rids that
+        completed during this tick."""
+        with self._mesh_ctx():
+            return self._step()
+
+    def _step(self) -> List[int]:
+        self._admit()
+        pool = self.pool
+        active = self._slot_req >= 0
+        if not active.any():
+            done = self._just_finished
+            self._just_finished = []
+            return done
+        # submit() guarantees a RAGGED_PREFILL_FAMILIES family, all of
+        # which support per-row bits — so budgets are always per-slot
+        budgets = jnp.asarray(self._budget, jnp.float32)          # (B,)
+        wv, av = self.controller.resolve(budgets)
+        keys = self._split_key(self.decode_block)
+        tok = jnp.asarray(self._tok[:, None], jnp.int32)
+        t = jnp.asarray(self._t, jnp.int32)
+        temp = jnp.asarray(self._temp, jnp.float32)
+        topk = jnp.asarray(self._topk, jnp.int32)
+        tok, t, pool.cache, toks = self._decode_scan(
+            self.qparams, tok, t, pool.cache, wv, av, temp, topk, keys)
+        toks_h = np.asarray(toks)
+        self._tok = np.asarray(tok)[:, 0].astype(np.int64)
+        self._t += self.decode_block
+        for slot in np.nonzero(active)[0]:
+            rid = int(self._slot_req[slot])
+            st = self.requests[rid]
+            take = int(min(self._remaining[slot], self.decode_block))
+            new = toks_h[slot, :take].tolist()
+            if self.eos_id is not None and self.eos_id in new:
+                new = new[:new.index(self.eos_id) + 1]
+            st.tokens.extend(int(x) for x in new)
+            self.stats.tokens += len(new)
+            self._remaining[slot] -= take
+            hit_eos = (self.eos_id is not None and new
+                       and new[-1] == self.eos_id)
+            if self._remaining[slot] <= 0 or hit_eos:
+                self._finish(slot)
+        done = self._just_finished
+        self._just_finished = []
+        return done
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, RequestStats]:
+        """Pump the scheduler until every submitted request completes;
+        returns {rid: RequestStats}.  Raises if the queue cannot drain
+        (no slots, or max_ticks exhausted) rather than silently returning
+        incomplete results."""
+        for _ in range(max_ticks):
+            if not self._queue and not (self._slot_req >= 0).any():
+                return dict(self.requests)
+            if self._queue and self.n_slots < 1:
+                raise RuntimeError("engine has no slots; requests can "
+                                   "never be admitted")
+            self.step()
+        pending = [r.rid for r in self.requests.values() if not r.done]
+        if pending:
+            raise RuntimeError(f"run() exhausted {max_ticks} ticks with "
+                               f"requests still pending: {pending}")
+        return dict(self.requests)
 
 
 def _default_policy() -> PrecisionPolicy:

@@ -42,6 +42,49 @@ def test_budget_controller_selection():
     assert int(w[0]) == 6
 
 
+def _controller_348():
+    cfgs = {k: pol.fixed(b, name=k)
+            for k, b in (("int3", 3), ("int4", 4), ("int8", 8))}
+    lat = {"int3": 1.0, "int4": 2.0, "int8": 3.0}
+    return pol.BudgetController(cfgs, lat, n_layers=4)
+
+
+def test_budget_select_boundaries():
+    c = _controller_348()
+    # exact-fit budget: a config whose predicted latency EQUALS the budget
+    # fits (<=), and the slowest such config wins
+    assert int(c.select(2.0)) == 1
+    assert int(c.select(3.0)) == 2
+    # budget below the fastest config: fall back to the fastest (index 0)
+    assert int(c.select(0.25)) == 0
+    w, a = c.resolve(0.25)
+    assert int(w[0]) == 3 and int(a[0]) == 3
+    # just under a boundary drops one config down
+    assert int(c.select(2.0 - 1e-6)) == 0 or int(c.select(1.99)) == 0
+
+
+def test_budget_controller_single_config():
+    c = pol.BudgetController({"only": pol.fixed(8)}, {"only": 1.0}, 4)
+    for budget in (0.0, 1.0, 100.0):
+        w, _ = c.resolve(budget)
+        assert w.shape == (4,) and int(w[0]) == 8
+
+
+def test_budget_select_vectorized():
+    """(B,) budget vector -> (B,) indices / (B, n_layers) bit matrices,
+    elementwise-equal to the scalar path."""
+    c = _controller_348()
+    budgets = jnp.asarray([0.1, 1.0, 2.0, 2.5, 3.0, 99.0])
+    idx = c.select(budgets)
+    assert idx.shape == budgets.shape
+    np.testing.assert_array_equal(np.asarray(idx), [0, 0, 1, 1, 2, 2])
+    for i, b in enumerate(np.asarray(budgets)):
+        assert int(idx[i]) == int(c.select(float(b)))
+    w, a = c.resolve(budgets)
+    assert w.shape == (6, 4) and a.shape == (6, 4)
+    np.testing.assert_array_equal(np.asarray(w[:, 0]), [3, 3, 4, 4, 8, 8])
+
+
 def test_serving_budget_switch_no_retrace():
     """Dynamic mixed-precision serving: changing the budget changes bits
     but never recompiles (the paper's zero-reconfiguration claim)."""
@@ -60,6 +103,28 @@ def test_serving_budget_switch_no_retrace():
     eng.set_budget(0.5)                # int4
     out4 = eng.generate(batch, steps=4)
     assert out8.shape == out4.shape == (2, 4)
+    assert eng.stats.prefill_traces == 1
+    assert eng.stats.decode_traces == 1
+
+
+def test_per_request_budget_vector_no_retrace():
+    """Rows of one batch carry DIFFERENT budgets (hence different per-layer
+    bit vectors) inside one compiled prefill + one compiled decode; varying
+    the budget vector across generate() calls never retraces."""
+    cfg = configs.get_smoke("qwen3_4b")
+    params = lm.init_params(cfg, KEY)
+    qparams = lm.quantize_params(params, cfg)
+    n = lm.n_bit_slots(cfg)
+    ctrl = pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 1.0, "int8": 2.0}, n)
+    eng = ServeEngine(cfg, qparams, max_len=64, controller=ctrl)
+    batch = {"tokens": jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)}
+
+    for budgets in ([10.0, 0.5], [0.5, 10.0], [0.5, 0.5], [10.0, 10.0]):
+        eng.set_budget(jnp.asarray(budgets))
+        out = eng.generate(batch, steps=4)
+        assert out.shape == (2, 4)
     assert eng.stats.prefill_traces == 1
     assert eng.stats.decode_traces == 1
 
