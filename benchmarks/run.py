@@ -27,8 +27,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (calibrate, fig5_runtimes, fig6_technology,
-                            fig7_dse, fig8_breakdown, roofline,
-                            serve_throughput, table7_bitfluid, table8_sota)
+                            fig7_dse, fig8_breakdown, grouped_dispatch,
+                            roofline, serve_throughput, table7_bitfluid,
+                            table8_sota)
     mods = [
         ("calibrate", calibrate),
         ("fig5_runtimes", fig5_runtimes),
@@ -38,6 +39,7 @@ def main(argv=None) -> int:
         ("table7_bitfluid", table7_bitfluid),
         ("table8_sota", table8_sota),
         ("serve_throughput", serve_throughput),
+        ("grouped_dispatch", grouped_dispatch),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))

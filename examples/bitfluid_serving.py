@@ -56,7 +56,8 @@ def main():
     for rid, desc in rids.items():
         st = results[rid]
         print(f"{desc}: served at mean {st.mean_wbits:.1f} weight bits "
-              f"on slot {st.slot} -> tokens={st.tokens}")
+              f"on slot {st.slot} -> tokens={st.tokens} "
+              f"(AP EDP {st.edp:.2e} J·s)")
     print(f"\n{eng.stats.tokens} tokens, {len(workload)} requests, "
           f"{eng.pool.n_slots} slots, {time.time() - t0:.2f}s wall")
     print(f"compiled once: prefill x{eng.stats.prefill_traces}, "

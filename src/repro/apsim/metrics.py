@@ -20,8 +20,13 @@ paper does not state its power basis; deltas are reported.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
 from repro.apsim.energy import TechParams, SRAM
-from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, area_mm2
+from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, _gemm_layer, area_mm2
+from repro.apsim.workloads import fc
 
 
 def peak_cycles(M: int) -> float:
@@ -53,6 +58,98 @@ def peak_gops_per_w(M: int, tech: TechParams = SRAM,
                     cfg: BFIMNAConfig = LR_CONFIG) -> float:
     ops_per_j = 2.0 / peak_energy_per_mac_j(M, tech)
     return ops_per_j / 1e9
+
+
+# ---------------------------------------------------------------------------
+# Bit-vector pricing — the serve engine's per-request latency/EDP accounting.
+#
+# A language model's serve path is, per token, a fixed list of GEMVs whose
+# dims come from the model config (lm.layer_gemm_dims); a request's resolved
+# per-layer (wbits, abits) vector prices each slot's GEMVs on the AP via the
+# same calibrated mapping the paper benchmarks use (mapper._gemm_layer on an
+# FC layer — (1, K) @ (K, N) is exactly the paper's FC case).  This is the
+# Table 7 accuracy-vs-EDP trade-off made live: every admitted request gets
+# AP cycles/energy per token, and RequestStats reports latency/EDP.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BitVectorCost:
+    """Per-token AP cost of one resolved per-layer bit vector.
+
+    ``per_layer_*`` align with the bit-slot axis (plus one trailing entry
+    for the logits head when it was priced); totals derive from them."""
+    per_layer_cycles: Tuple[float, ...]
+    per_layer_energy_j: Tuple[float, ...]
+    freq_hz: float = 1e9
+
+    @property
+    def cycles(self) -> float:
+        return sum(self.per_layer_cycles)
+
+    @property
+    def energy_j(self) -> float:
+        return sum(self.per_layer_energy_j)
+
+    @property
+    def latency_s(self) -> float:
+        return self.cycles / self.freq_hz
+
+    @property
+    def edp(self) -> float:
+        """Per-token energy-delay product (J·s)."""
+        return self.energy_j * self.latency_s
+
+
+def _clamp_bits(b) -> int:
+    return int(min(max(int(b), 1), 16))
+
+
+@functools.lru_cache(maxsize=4096)
+def gemv_cost(K: int, N: int, Mw: int, Ma: int, *,
+              cfg: BFIMNAConfig = LR_CONFIG,
+              tech: TechParams = SRAM) -> Tuple[float, float]:
+    """(cycles, energy_j) of one serve GEMV (1, K) @ (K, N) at (Mw, Ma).
+
+    Cached: uniform bit vectors price every layer to the same (K, N, Mw,
+    Ma) tuples, so per-request admission pays the analytic mapping once
+    per distinct shape/bits pair, not once per layer."""
+    rep = _gemm_layer(cfg, tech, fc(f"gemv_{K}x{N}", K, N, relu=False),
+                      Mw, Ma)
+    return rep.cycles, rep.energy_j
+
+
+def price_bit_vector(gemms: Sequence[Sequence[Tuple[int, int]]],
+                     wvec: Sequence[int], avec: Sequence[int], *,
+                     head: Optional[Tuple[int, int]] = None,
+                     cfg: BFIMNAConfig = LR_CONFIG,
+                     tech: TechParams = SRAM) -> BitVectorCost:
+    """Price a resolved per-layer bit vector against its model's GEMVs.
+
+    ``gemms``: one sequence of (K, N) pairs per bit slot (see
+    ``lm.layer_gemm_dims``); ``head``, when given, is priced at the last
+    slot's bits (the logits-GEMM rule) and appended as a trailing entry.
+    Bits clamp into [1, 16] (>= 16 is the fp sentinel).
+    """
+    if len(wvec) != len(gemms) or len(avec) != len(gemms):
+        raise ValueError(
+            f"bit vectors (len {len(wvec)}/{len(avec)}) do not match the "
+            f"model's {len(gemms)} bit slots")
+    cyc, en = [], []
+    for dims, w, a in zip(gemms, wvec, avec):
+        Mw, Ma = _clamp_bits(w), _clamp_bits(a)
+        c = e = 0.0
+        for K, N in dims:
+            ci, ei = gemv_cost(K, N, Mw, Ma, cfg=cfg, tech=tech)
+            c += ci
+            e += ei
+        cyc.append(c)
+        en.append(e)
+    if head is not None:
+        ci, ei = gemv_cost(head[0], head[1], _clamp_bits(wvec[-1]),
+                           _clamp_bits(avec[-1]), cfg=cfg, tech=tech)
+        cyc.append(ci)
+        en.append(ei)
+    return BitVectorCost(tuple(cyc), tuple(en), cfg.freq_hz)
 
 
 PAPER_TABLE8 = {

@@ -141,6 +141,25 @@ def shard_batch(batch, mesh=None):
     return jax.device_put(batch, batch_shardings(batch, mesh))
 
 
+def bits_pspec(leaf) -> Tuple[Optional[str], ...]:
+    """Per-layer bit tables: (L,) replicates; a per-request (B, L) bit
+    matrix shards its batch dim over dp so each dp shard carries exactly
+    the bit rows of the activation rows it owns."""
+    if leaf.ndim == 2:
+        return ("dp", None)
+    return (None,) * leaf.ndim
+
+
+def shard_bits(bits, mesh=None):
+    """device_put a resolved bit table onto the active mesh (identity
+    off-mesh); replication fallback covers non-dividing batch sizes."""
+    mesh = mesh if mesh is not None else api.active_mesh()
+    if mesh is None:
+        return bits
+    return jax.device_put(bits, NamedSharding(
+        mesh, logical_to_mesh(mesh, bits_pspec(bits), bits.shape)))
+
+
 # ---------------------------------------------------------------------------
 # KV / SSM caches
 # ---------------------------------------------------------------------------

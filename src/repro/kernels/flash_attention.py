@@ -7,12 +7,12 @@ running max / normalizer / accumulator persist in VMEM scratch across the
 K walk.  Causal + sliding-window masks derive from tile coordinates with
 iota — nothing S² ever materializes.
 
-The pure-JAX blockwise path (models/transformer._flash_sdpa) is the
-lowering used inside the big models (XLA fuses it adequately and it
-composes with SPMD); this kernel is the single-core TPU-optimal version
-for the (B·H, S, hd) hot loop, validated against ref.flash_attention_ref
-in interpret mode.  MXU alignment: bq/bk multiples of 128, hd padded by
-ops.py.
+The pure-JAX blockwise path (kernels/ref.flash_attention_chunked_ref) is
+the off-TPU lowering ops.flash_attention dispatches to for long
+sequences (XLA fuses it adequately and it composes with SPMD); this
+kernel is the single-core TPU-optimal version for the (B·H, S, hd) hot
+loop, validated against ref.flash_attention_ref in interpret mode.  MXU
+alignment: bq/bk multiples of 128, hd padded by ops.py.
 """
 from __future__ import annotations
 

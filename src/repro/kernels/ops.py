@@ -1,22 +1,51 @@
 """Public kernel API: padding, dispatch (Pallas-TPU vs XLA ref), caching.
 
+This module is the **single compute path** for serve-form math: every
+quantized GEMM in ``models/`` reaches Pallas (TPU) or the jnp refs (CPU,
+dry-run) only through the dispatchers here — ``serve_linear`` for int8 /
+packed-int4 containers (scalar, traced, or per-row bits), and
+``flash_attention`` for long-sequence attention.
+
 ``use_pallas()`` is True only on real TPU backends; elsewhere (this CPU
 container, and inside the 512-device dry-run) the mathematically identical
 ref path lowers through XLA, so compiled-artifact analysis reflects the
 same algorithm.  Kernel *numerics* are validated against ref in
-tests/test_kernels.py with interpret=True.
+tests/test_kernels.py with interpret=True; setting ``REPRO_PALLAS=interpret``
+in the environment routes every dispatcher through interpret-mode Pallas
+(the CI kernel job).
 
 Per-precision specializations are cached by (n_planes, block shape) via
 jit's static-arg cache: switching a layer between 2/4/8 bits after warmup
 costs no recompilation — the dispatch-cache realization of bit fluidity.
+
+Bit-grouped batch execution
+---------------------------
+Per-request precision hands ``serve_linear`` a ``(B,)`` bit vector.  The
+naive realization (one weight requantization per row) does O(B·K·N) weight
+work for at most a handful of distinct bit-widths.  Instead, the grouped
+path requantizes the container once per *family* in the static
+``BIT_FAMILIES`` set, runs one batch GEMM per family (each at a static
+plane count — the plane-serial kernel's cost ∝ bits), and gathers each
+row's result from its family's accumulator: O(G·K·N) weight work,
+zero-retrace (family membership is data).  ``set_bit_families`` /
+``bit_families`` narrow the set to the precisions a serving policy can
+actually emit; rows whose bits fall between families snap UP to the next
+family, and rows ABOVE the largest family clamp down to it — so a family
+set must always include its policy's widest bit-width (engines derive it
+from the controller, which guarantees this; results are bit-exact
+whenever the bits are in the set).  The historical
+per-row vmap path is kept behind ``set_row_dispatch("vmap")`` as the
+benchmark baseline.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import contextlib
+import os
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitfluid as bf
 from repro.kernels import ref as kref
@@ -25,17 +54,90 @@ from repro.kernels.quant_matmul import quant_matmul as _quant_pallas
 from repro.kernels.int4_matmul import int4_matmul as _int4_pallas
 
 _FORCE: Optional[bool] = None  # tests set this to route through interpret
+_INTERPRET = os.environ.get("REPRO_PALLAS", "").lower() == "interpret"
+if _INTERPRET:
+    _FORCE = True
+
+# Distinct weight bit-widths the grouped per-row path specializes for.
+BIT_FAMILIES = (2, 3, 4, 6, 8)
+_families: Sequence[int] = BIT_FAMILIES
+_row_dispatch = "grouped"
 
 
-def set_force_pallas(v: Optional[bool]) -> None:
-    global _FORCE
+def set_force_pallas(v: Optional[bool], interpret: Optional[bool] = None
+                     ) -> None:
+    global _FORCE, _INTERPRET
     _FORCE = v
+    if interpret is not None:
+        _INTERPRET = interpret
 
 
 def use_pallas() -> bool:
     if _FORCE is not None:
         return _FORCE
     return jax.default_backend() == "tpu"
+
+
+def _interp(flag: bool) -> bool:
+    return bool(flag or _INTERPRET)
+
+
+def set_bit_families(fams: Sequence[int]) -> None:
+    """Set the static family set for grouped per-row dispatch.
+
+    Values clamp into [1, 8] (the int8 container width); serving engines
+    derive this from their controller's registered configurations, so the
+    grouped path runs exactly one GEMM per precision the policy can emit.
+    The set MUST contain the widest bit-width rows can carry: bits between
+    families snap up, but bits above the largest family clamp DOWN to it
+    (there is no wider GEMM to snap up to).
+    """
+    global _families
+    vals = tuple(sorted({min(max(int(f), 1), 8) for f in fams}))
+    if not vals:
+        raise ValueError("bit family set must be non-empty")
+    _families = vals
+
+
+def get_bit_families():
+    return tuple(_families)
+
+
+@contextlib.contextmanager
+def bit_families(fams: Sequence[int]):
+    """Scoped family set (trace-time property of the jitted caller)."""
+    global _families
+    prev = _families
+    set_bit_families(fams)
+    try:
+        yield
+    finally:
+        _families = prev
+
+
+def set_row_dispatch(mode: str) -> None:
+    """'grouped' (default) or 'vmap' (the per-row baseline, kept for
+    benchmarks/parity tests).  Read at trace time."""
+    global _row_dispatch
+    if mode not in ("grouped", "vmap"):
+        raise ValueError(f"row dispatch must be 'grouped' or 'vmap', "
+                         f"got {mode!r}")
+    _row_dispatch = mode
+
+
+def get_row_dispatch() -> str:
+    return _row_dispatch
+
+
+@contextlib.contextmanager
+def row_dispatch(mode: str):
+    global _row_dispatch
+    prev = _row_dispatch
+    set_row_dispatch(mode)
+    try:
+        yield
+    finally:
+        _row_dispatch = prev
 
 
 def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
@@ -45,10 +147,18 @@ def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
     return x
 
 
+def _block_dim(d: int) -> int:
+    """128 for MXU-sized dims; small dims shrink to the next power of two
+    (floor 8) so a (64, 32) tail GEMM doesn't pad every operand to 128."""
+    if d >= 128:
+        return 128
+    return max(8, 1 << (max(d - 1, 1)).bit_length())
+
+
 def _blocks_for(M: int, N: int, K: int):
-    """MXU-aligned blocks; small dims shrink to avoid wasteful padding."""
-    bm = 128 if M >= 128 else max(8, 1 << (max(M - 1, 1)).bit_length())
-    return min(bm, 128), 128, 128
+    """MXU-aligned blocks; every small dim shrinks to avoid wasteful
+    padding (M, N, and K alike — N/K were previously pinned at 128)."""
+    return _block_dim(M), _block_dim(N), _block_dim(K)
 
 
 # ---------------------------------------------------------------------------
@@ -56,6 +166,7 @@ def _blocks_for(M: int, N: int, K: int):
 def bitplane_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, *, n_planes: int = 8,
                     interpret: bool = False) -> jnp.ndarray:
     """int8 (M,K) @ int8-container (K,N) -> int32 (M,N), plane-serial."""
+    interpret = _interp(interpret)
     if not (use_pallas() or interpret):
         return kref.bitplane_matmul_ref(x_q, w_q, n_planes)
     M, K = x_q.shape
@@ -72,6 +183,7 @@ def quant_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray,
                  bias: Optional[jnp.ndarray] = None, *, act: str = "none",
                  out_dtype=jnp.float32, interpret: bool = False) -> jnp.ndarray:
     """int8 (M,K) @ int8 (K,N) with fused per-channel dequant epilogue."""
+    interpret = _interp(interpret)
     M, K = x_q.shape
     N = w_q.shape[1]
     scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (1, N))
@@ -91,20 +203,206 @@ def quant_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray,
 
 def int4_matmul(x_q: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray,
                 *, out_dtype=jnp.float32, interpret: bool = False) -> jnp.ndarray:
-    """int8 (M,K) @ halves-packed uint8 (K,N/2) with fused dequant."""
+    """int8 (M,K) @ halves-packed uint8 (K,N/2) with fused dequant.
+
+    Invalid operand shapes raise ``ValueError``.  When K or the packed
+    column count does not tile (padding packed columns would split the
+    low/high nibble halves inconsistently), the call falls back to the
+    XLA ref path instead of crashing — model dims are 128-multiples, so
+    the Pallas path covers the hot shapes.
+    """
+    interpret = _interp(interpret)
     M, K = x_q.shape
+    if w_packed.ndim != 2 or w_packed.shape[0] != K:
+        raise ValueError(
+            f"int4_matmul: packed weights {w_packed.shape} do not match "
+            f"activations {x_q.shape} on K={K}")
     N = 2 * w_packed.shape[1]
-    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (1, N))
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.size not in (1, N):
+        raise ValueError(
+            f"int4_matmul: scale {scale.shape} is not broadcastable to "
+            f"(1, {N}) for packed weights {w_packed.shape}")
+    scale = jnp.broadcast_to(scale.reshape(1, -1), (1, N))
     if not (use_pallas() or interpret):
         return kref.int4_matmul_ref(x_q, w_packed, scale, out_dtype)
     bm, bn, bk = _blocks_for(M, N, K)
-    # padding packed columns pads both halves consistently only when no pad
-    # is needed; require alignment instead (model dims are 128-multiples).
-    assert K % bk == 0 and (N // 2) % bn == 0, (K, N)
+    if K % bk or N % bn or (N // 2) % bn:
+        return kref.int4_matmul_ref(x_q, w_packed, scale, out_dtype)
     xp = _pad_to(x_q, (bm, bk))
     out = _int4_pallas(xp, w_packed, scale, out_dtype=out_dtype,
                        bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Serve-form linears — the models' quantized compute path.
+# ---------------------------------------------------------------------------
+
+def _static_bits(b) -> Optional[int]:
+    """Python int when ``b`` is a compile-time constant, else None."""
+    if isinstance(b, (int, np.integer)) and not isinstance(b, bool):
+        return int(b)
+    return None
+
+
+def int8_accum(x_q: jnp.ndarray, w_q: jnp.ndarray, *,
+               planes: Optional[int] = None,
+               interpret: bool = False) -> jnp.ndarray:
+    """int8 (M,K) @ int8 (K,N) -> int32 through the kernel layer.
+
+    Static ``planes`` runs the plane-serial kernel at exactly that many
+    bit planes (TPU cost ∝ assigned bits); None means the bits were traced
+    upstream, so the container-width path runs (the 8-plane walk lowers to
+    one native int8 MXU matmul)."""
+    n = 8 if planes is None else min(max(planes, 1), 8)
+    return bitplane_matmul(x_q, w_q, n_planes=n, interpret=interpret)
+
+
+def _epilogue(acc2, lead, x_scale, w_s, bias):
+    """f32(acc) * x_scale * w_s (+ bias) — fixed multiply order, identical
+    to the historical inline serve math (parity-tested bit-exact)."""
+    y = acc2.astype(jnp.float32).reshape(*lead, -1) * x_scale * w_s
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y
+
+
+def _container_linear(x, qw, s, bias, *, from_bits, wbits, abits, interpret):
+    x2 = x.astype(jnp.float32)
+    x_scale = bf.symmetric_scale(x2, abits)           # per-tensor scalar
+    x_q = bf.quantize(x2, x_scale, abits)
+    w_q = bf.requant_shift(qw, wbits, from_bits=from_bits)
+    w_s = bf.effective_scale(s, wbits, from_bits=from_bits)
+    acc = int8_accum(x_q.reshape(-1, x.shape[-1]), w_q,
+                     planes=_static_bits(wbits), interpret=interpret)
+    return _epilogue(acc, x.shape[:-1], x_scale, w_s, bias)
+
+
+def quant_linear(x: jnp.ndarray, q: jnp.ndarray, s: jnp.ndarray,
+                 bias: Optional[jnp.ndarray] = None, *, wbits=8, abits=8,
+                 interpret: bool = False) -> jnp.ndarray:
+    """float (..., K) @ int8-container {q (K,N), s (1,N)} -> f32 (..., N).
+
+    Dyadic requantization to ``wbits`` + dynamic ``abits`` activation
+    quantization; bits may be Python ints (static → plane-serial kernel)
+    or traced scalars (zero-recompilation switch)."""
+    return _container_linear(x, q, s, bias, from_bits=8, wbits=wbits,
+                             abits=abits, interpret=_interp(interpret))
+
+
+def int4_linear(x: jnp.ndarray, q4: jnp.ndarray, s: jnp.ndarray,
+                bias: Optional[jnp.ndarray] = None, *, wbits=8, abits=8,
+                interpret: bool = False) -> jnp.ndarray:
+    """float (..., K) @ packed-int4 container {q4 (K,N/2), s (1,N)}.
+
+    With static ``wbits >= 4`` on the Pallas path, requantization is the
+    identity and the packed kernel streams nibbles straight from HBM (half
+    the weight traffic); the dequant epilogue stays outside the kernel in
+    canonical order, so results match the unpacked path exactly (the int4
+    accumulator magnitude is < 2^24 for any practical K, hence f32-exact).
+    Otherwise the container unpacks and takes the shared requant path.
+    """
+    interpret = _interp(interpret)
+    wb = _static_bits(wbits)
+    if wb is not None and wb >= 4 and (use_pallas() or interpret):
+        N = 2 * q4.shape[-1]
+        x2 = x.astype(jnp.float32)
+        x_scale = bf.symmetric_scale(x2, abits)
+        x_q = bf.quantize(x2, x_scale, abits)
+        acc = int4_matmul(x_q.reshape(-1, x.shape[-1]), q4,
+                          jnp.ones((1, N), jnp.float32),
+                          out_dtype=jnp.float32, interpret=interpret)
+        return _epilogue(acc, x.shape[:-1], x_scale,
+                         jnp.asarray(s, jnp.float32), bias)
+    return _container_linear(x, bf.unpack_int4_halves(q4), s, bias,
+                             from_bits=4, wbits=wbits, abits=abits,
+                             interpret=interpret)
+
+
+def serve_linear(p: dict, x: jnp.ndarray, wbits=8, abits=8, *,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Serve-form linear dispatch: {"q","s"[,"b"]} or {"q4","s"[,"b"]}.
+
+    ``wbits``/``abits`` scalars (Python ints or traced) take the container
+    path; ``(B,)`` vectors (per-request precision) take the bit-grouped
+    batch path (or the vmap baseline under ``set_row_dispatch("vmap")``).
+    Returns float32; callers cast to their activation dtype.
+    """
+    if getattr(wbits, "ndim", 0) >= 1 or getattr(abits, "ndim", 0) >= 1:
+        return _serve_linear_rows(p, x, wbits, abits, _interp(interpret))
+    bias = p.get("b")
+    if "q4" in p:
+        return int4_linear(x, p["q4"], p["s"], bias, wbits=wbits,
+                           abits=abits, interpret=interpret)
+    return quant_linear(x, p["q"], p["s"], bias, wbits=wbits, abits=abits,
+                        interpret=interpret)
+
+
+def _family_index(wb: jnp.ndarray, fams) -> jnp.ndarray:
+    """Index of the smallest family >= wb (clamped into the family range) —
+    exact whenever wb is in the set, snap-up otherwise."""
+    bounds = jnp.asarray(fams, jnp.int32)
+    clipped = jnp.clip(jnp.asarray(wb, jnp.int32), bounds[0], bounds[-1])
+    return jnp.searchsorted(bounds, clipped, side="left").astype(jnp.int32)
+
+
+def _serve_linear_rows(p, x, wbits, abits, interpret):
+    """Per-row precision: grouped (one GEMM per static bit family) or the
+    vmap baseline (one weight requant per row)."""
+    B = x.shape[0]
+    wb = jnp.broadcast_to(jnp.asarray(wbits, jnp.int32), (B,))
+    ab = jnp.broadcast_to(jnp.asarray(abits, jnp.int32), (B,))
+    if _row_dispatch == "vmap":
+        return jax.vmap(
+            lambda xr, w, a: serve_linear(p, xr, w, a, interpret=interpret)
+        )(x, wb, ab)
+
+    if "q4" in p:
+        qw, from_bits = bf.unpack_int4_halves(p["q4"]), 4
+    else:
+        qw, from_bits = p["q"], 8
+    K = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.astype(jnp.float32)
+    # per-row dynamic activation quantization at per-row abits (elementwise
+    # — activations never need grouping)
+    axes = tuple(range(1, x2.ndim))
+    amax = jnp.max(jnp.abs(x2), axis=axes, keepdims=True)   # (B, 1, ..., 1)
+    ab_b = ab.reshape((B,) + (1,) * (x2.ndim - 1))
+    lim = bf.qmax(ab_b)
+    x_scale = jnp.maximum(amax, 1e-8) / lim
+    x_q = jnp.clip(jnp.round(x2 / x_scale), -lim, lim).astype(bf.INT_DTYPE)
+    xq2 = x_q.reshape(-1, K)                                # (R, K)
+    R = xq2.shape[0]
+
+    # one requant + one grouped GEMM per distinct family — families below
+    # the container width collapse (requant 4->6 == 4->4 for a q4 container)
+    fams = tuple(_families)
+    eff = [min(f, from_bits) for f in fams]
+    uniq = sorted(set(eff))
+    accs, scales = [], []
+    for f in uniq:
+        w_f = bf.requant_shift(qw, f, from_bits=from_bits)
+        accs.append(int8_accum(xq2, w_f, planes=f, interpret=interpret))
+        scales.append(jnp.broadcast_to(
+            jnp.asarray(bf.effective_scale(p["s"], f, from_bits=from_bits),
+                        jnp.float32).reshape(1, -1), (1, accs[-1].shape[-1])))
+    acc_stack = jnp.stack(accs)                             # (G, R, N)
+    ws_stack = jnp.concatenate(scales, axis=0)              # (G, N)
+
+    # scatter rows back: gather each row's accumulator from its family
+    remap = jnp.asarray([uniq.index(e) for e in eff], jnp.int32)
+    fam_of_row = remap[_family_index(wb, fams)]              # (B,)
+    rows_per_b = R // B
+    idx_r = jnp.repeat(fam_of_row, rows_per_b)               # (R,)
+    acc = acc_stack[idx_r, jnp.arange(R)]                    # (R, N)
+    w_s = ws_stack[idx_r]                                    # (R, N)
+    xs_flat = jnp.broadcast_to(x_scale, x2.shape[:-1] + (1,)).reshape(R, 1)
+    y = acc.astype(jnp.float32) * xs_flat * w_s
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.reshape(lead + (y.shape[-1],))
 
 
 # ---------------------------------------------------------------------------
@@ -116,8 +414,10 @@ def fluid_linear(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
                  interpret: bool = False) -> jnp.ndarray:
     """float (..., K) @ int8-container (K, N): the bit-fluid serving matmul.
 
-    Static ``wbits`` routes through the plane-serial kernel (cost ∝ wbits);
-    use core.bitfluid.fluid_int8_matmul for traced (runtime-tensor) bits.
+    Static ``wbits`` routes through the plane-serial kernel (cost ∝ wbits),
+    masking container MSBs directly (truncation semantics — serve_linear
+    adds the dyadic-rounding requant the models use); use
+    core.bitfluid.fluid_int8_matmul for traced (runtime-tensor) bits.
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
@@ -131,9 +431,17 @@ def fluid_linear(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0,
                     interpret: bool = False) -> jnp.ndarray:
-    """Flat-head flash attention: (BH, Sq, hd). Pads Sq/Sk/hd to tiles."""
+    """Flat-head flash attention: (BH, Sq, hd). Pads Sq/Sk/hd to tiles.
+
+    Off-TPU, sequences longer than one ref chunk take the blockwise
+    online-softmax ref (O(S·chunk) memory — dry-run artifacts keep the
+    flash memory posture); short ones take the exact oracle."""
     from repro.kernels.flash_attention import flash_attention as _fa
+    interpret = _interp(interpret)
     if not (use_pallas() or interpret):
+        if max(q.shape[1], k.shape[1]) > kref.FLASH_CHUNK:
+            return kref.flash_attention_chunked_ref(q, k, v, causal=causal,
+                                                    window=window)
         return kref.flash_attention_ref(q, k, v, causal, window)
     BH, Sq, hd = q.shape
     Sk = k.shape[1]

@@ -105,7 +105,9 @@ def _serve_continuous(cfg, qparams, ctrl, args) -> None:
         st = res[rid]
         print(f"[serve] req{rid}: budget={st.budget_s:g}s -> "
               f"{st.mean_wbits:.1f} mean wbits, {st.n_tokens} tokens "
-              f"(slot {st.slot}, {st.finished_s - st.submitted_s:.2f}s)")
+              f"(slot {st.slot}, {st.finished_s - st.submitted_s:.2f}s, "
+              f"AP {st.ap_latency_s * 1e3:.2f}ms / "
+              f"{st.ap_energy_j * 1e3:.2f}mJ, EDP {st.edp:.3e} J·s)")
     print(f"[serve] {eng.stats.tokens} tokens in {dt:.2f}s "
           f"({eng.stats.tokens / dt:.1f} tok/s) across "
           f"{args.requests} requests on {args.n_slots} slots")
@@ -125,10 +127,12 @@ def _serve_batches(cfg, qparams, ctrl, args) -> None:
         eng.generate(batch, steps=args.steps)
         dt = time.time() - t0
         wv, _ = ctrl.resolve(jnp.asarray(budget))
+        cost = eng.price_budget(budget)
         print(f"[serve] budget={budget}: mean_bits="
               f"{float(np.mean(np.asarray(wv))):.1f} "
               f"{args.requests * args.steps} tokens in {dt:.2f}s "
-              f"({args.requests * args.steps / dt:.1f} tok/s)")
+              f"({args.requests * args.steps / dt:.1f} tok/s; AP "
+              f"{cost.cycles:.0f} cy/tok, {cost.energy_j * 1e3:.3f} mJ/tok)")
     print(f"[serve] compiled programs: prefill={eng.stats.prefill_traces} "
           f"decode={eng.stats.decode_traces} (fluid across "
           f"{len(args.budgets)} budgets)")

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitfluid as bf
+from repro.kernels import ops as kops
 
 DTYPE = jnp.bfloat16
 
@@ -62,47 +63,40 @@ def apply_linear(p: dict, x: jnp.ndarray, wbits=8, abits=8) -> jnp.ndarray:
 
     ``wbits``/``abits`` are scalars (shared precision — the fast path) or
     ``(B,)`` vectors matching ``x``'s leading axis (per-request precision:
-    serving batches whose rows carry different latency budgets).  The
-    vector path vmaps the scalar kernel over rows, so each row quantizes
-    weights AND activations at its own bit-width; rows are numerically
-    independent of their batch-mates (DESIGN.md §6).
+    serving batches whose rows carry different latency budgets).
+
+    Serve-form containers ({"q"/"q4", "s"}) dispatch wholesale through the
+    kernel layer (:func:`repro.kernels.ops.serve_linear`): scalar bits take
+    the container path, per-row bits the bit-grouped batch path — one
+    weight requantization and one GEMM per distinct bit family instead of
+    per row, with rows numerically independent of their batch-mates
+    (DESIGN.md §3/§6).  Train form stays here: fake-quant STE is float
+    math, not a quantized kernel.
     """
-    if getattr(wbits, "ndim", 0) >= 1 or getattr(abits, "ndim", 0) >= 1:
-        B = x.shape[0]
-        wb = jnp.broadcast_to(jnp.asarray(wbits, jnp.int32), (B,))
-        ab = jnp.broadcast_to(jnp.asarray(abits, jnp.int32), (B,))
-        return jax.vmap(lambda xr, w, a: _apply_linear1(p, xr, w, a))(
-            x, wb, ab)
-    return _apply_linear1(p, x, wbits, abits)
-
-
-def _apply_linear1(p: dict, x: jnp.ndarray, wbits, abits) -> jnp.ndarray:
-    """Scalar-bits linear kernel (see apply_linear)."""
+    per_row = (getattr(wbits, "ndim", 0) >= 1
+               or getattr(abits, "ndim", 0) >= 1)
     if "w" in p:                                     # train: fake-quant STE
-        # stay bf16 END-TO-END around the dot (fake_quant rounds in f32
-        # internally but preserves input dtype): both the forward TP
-        # partial sums AND the backward dx cotangant reductions then move
-        # bf16 — the dominant train all-reduces were f32 activation-shaped
-        # cotangents from an f32 round-trip here (§Perf iter 6)
-        w = bf.fake_quant(p["w"], wbits, axis=0)
-        xq = bf.fake_quant(x.astype(DTYPE), abits)
-        y = jnp.einsum("...k,kn->...n", xq, w,
-                       preferred_element_type=DTYPE).astype(jnp.float32)
-    else:                                            # serve: integer path
-        if "q4" in p:
-            qw = bf.unpack_int4_halves(p["q4"])
-            from_bits = 4
-        else:
-            qw, from_bits = p["q"], 8
-        w_q = bf.requant_shift(qw, wbits, from_bits=from_bits)
-        w_s = bf.effective_scale(p["s"], wbits, from_bits=from_bits)
-        x2 = x.astype(jnp.float32)
-        x_scale = bf.symmetric_scale(x2, abits)
-        x_q = bf.quantize(x2, x_scale, abits)
-        acc = jax.lax.dot_general(
-            x_q, w_q, dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        y = acc.astype(jnp.float32) * x_scale * w_s
+        if per_row:
+            B = x.shape[0]
+            wb = jnp.broadcast_to(jnp.asarray(wbits, jnp.int32), (B,))
+            ab = jnp.broadcast_to(jnp.asarray(abits, jnp.int32), (B,))
+            return jax.vmap(lambda xr, w, a: _train_linear(p, xr, w, a))(
+                x, wb, ab)
+        return _train_linear(p, x, wbits, abits)
+    return kops.serve_linear(p, x, wbits, abits).astype(DTYPE)
+
+
+def _train_linear(p: dict, x: jnp.ndarray, wbits, abits) -> jnp.ndarray:
+    """Scalar-bits fake-quant (STE) linear — the QAT path."""
+    # stay bf16 END-TO-END around the dot (fake_quant rounds in f32
+    # internally but preserves input dtype): both the forward TP
+    # partial sums AND the backward dx cotangant reductions then move
+    # bf16 — the dominant train all-reduces were f32 activation-shaped
+    # cotangents from an f32 round-trip here (§Perf iter 6)
+    w = bf.fake_quant(p["w"], wbits, axis=0)
+    xq = bf.fake_quant(x.astype(DTYPE), abits)
+    y = jnp.einsum("...k,kn->...n", xq, w,
+                   preferred_element_type=DTYPE).astype(jnp.float32)
     if "b" in p:
         y = y + p["b"].astype(jnp.float32)
     return y.astype(DTYPE)

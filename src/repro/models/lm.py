@@ -57,6 +57,54 @@ def n_bit_slots(cfg: ModelConfig) -> int:
     return cfg.n_layers
 
 
+def layer_gemm_dims(cfg: ModelConfig):
+    """Per-bit-slot serve GEMV dims: one tuple of (K, N) pairs per slot.
+
+    Each pair is a serve-form linear a single token flows through at that
+    slot's precision; ``apsim.metrics.price_bit_vector`` turns these plus
+    a resolved (wbits, abits) vector into AP cycles/energy — the serve
+    engine's per-request EDP accounting (paper Table 7, live).  Hybrid /
+    enc-dec entries are first-order: the shared attention block and the
+    cross-attention projections are charged at their slot's bits.
+    """
+    d = cfg.d_model
+    attn = ((d, cfg.n_heads * cfg.head_dim),
+            (d, cfg.n_kv_heads * cfg.head_dim),
+            (d, cfg.n_kv_heads * cfg.head_dim),
+            (cfg.n_heads * cfg.head_dim, d))
+
+    def mlp(f):
+        if cfg.mlp_type == "swiglu":
+            return ((d, f), (d, f), (f, d))
+        return ((d, f), (f, d))
+
+    if cfg.family in ("dense", "vlm"):
+        return (attn + mlp(cfg.d_ff),) * cfg.n_layers
+    if cfg.family == "moe":
+        per = attn + cfg.experts_per_token * mlp(cfg.d_ff)
+        if cfg.n_shared_experts:
+            per = per + mlp(cfg.d_ff * cfg.n_shared_experts)
+        return (per,) * cfg.n_layers
+    d_inner, H, N, _ = mamba2.dims(cfg)
+    mam = ((d, 2 * d_inner + 2 * N + H), (d_inner, d))    # in/out proj
+    if cfg.family == "ssm":
+        return (mam,) * cfg.n_layers
+    if cfg.family == "hybrid":
+        per = attn + mlp(cfg.d_ff) + mam * cfg.attn_every
+        return (per,) * hybrid.n_super(cfg)
+    if cfg.family == "encdec":
+        enc = attn + mlp(cfg.d_ff)
+        dec = attn + attn + mlp(cfg.d_ff)                 # self + cross
+        return (enc,) * cfg.n_enc_layers + (dec,) * cfg.n_layers
+    raise ValueError(cfg.family)
+
+
+def head_gemm_dims(cfg: ModelConfig):
+    """(K, N) of the per-token logits GEMM (priced at the last slot's
+    bits, mirroring logits_fn's _last_layer_bits rule)."""
+    return (cfg.d_model, cfg.padded_vocab)
+
+
 def init_params(cfg: ModelConfig, key) -> dict:
     k_emb, k_layers, k_head = jax.random.split(key, 3)
     p = {"emb": (jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model),

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro import dist
 from repro.core import bitfluid as bf
+from repro.kernels import ops as kops
 from repro.models import common as cm
 
 
@@ -63,17 +64,15 @@ def _expert_ffn(pe, xin, wbits, abits):
         h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
              ).astype(cm.DTYPE)
         return jax.vmap(per_expert, in_axes=(0, 0, 0))(pe["wd"], h, wb)
-    # serve form: {"q": (E,d,f) int8, "s": (E,1,f)}
+    # serve form: {"q": (E,d,f) int8, "s": (E,1,f)} — per-expert weights
+    # differ, so the per-expert requant is NOT redundant (unlike per-row
+    # bits over shared weights); each expert's GEMM reaches the kernel
+    # layer through ops.serve_linear under vmap.
     wb = jnp.broadcast_to(jnp.asarray(wbits), (pe["wg"]["q"].shape[0],))
 
     def per_expert_q(q, s, x, b):
-        w_q = bf.requant_shift(q, b)
-        w_s = bf.effective_scale(s, b)
-        xs = bf.symmetric_scale(x.astype(jnp.float32), abits)
-        xq = bf.quantize(x.astype(jnp.float32), xs, abits)
-        acc = jax.lax.dot_general(xq, w_q, (((1,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
-        return (acc.astype(jnp.float32) * xs * w_s).astype(cm.DTYPE)
+        return kops.serve_linear({"q": q, "s": s}, x, b, abits
+                                 ).astype(cm.DTYPE)
 
     g = jax.vmap(per_expert_q, (0, 0, 0, 0))(pe["wg"]["q"], pe["wg"]["s"], xin, wb)
     u = jax.vmap(per_expert_q, (0, 0, 0, 0))(pe["wu"]["q"], pe["wu"]["s"], xin, wb)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import dist
+from repro.kernels import ops as kops
 from repro.models import common as cm
 
 EMPTY_POS = 2 ** 30          # "no token here": fails kpos <= t forever
@@ -160,7 +161,8 @@ def _sdpa(q, k, v, bias, cfg):
     """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd); bias: (Sq,Sk) or (B,Sq,Sk).
 
     Grouped-query einsum; used for decode (Sq==1) and short sequences,
-    where the scores tensor is small.  Long sequences take _flash_sdpa."""
+    where the scores tensor is small.  Long sequences take _flash (the
+    kernel-layer flash dispatcher)."""
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -179,18 +181,19 @@ def _sdpa(q, k, v, bias, cfg):
 
 
 FLASH_THRESHOLD = 2048
-FLASH_CHUNK = 2048
-NEG_INF = -1e30
 
 
-def _flash_sdpa(q, k, v, q_pos, k_pos, cfg, causal: bool):
-    """Blockwise (flash) attention in pure JAX: O(S·chunk) memory.
+def _flash(q, k, v, cfg, causal: bool):
+    """Long-sequence attention via the kernel-layer flash dispatcher.
 
     q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) — KV heads are expanded to H flat
     heads so the `model` axis shards the head dim of every intermediate
-    (Megatron semantics); the scores tensor never materializes beyond one
-    (B, H, Qc, Kc) tile per scan step.  q_pos/k_pos: (Sq,)/(Sk,) absolute
-    positions driving the causal/sliding-window mask per tile.
+    (Megatron semantics), then heads flatten into the batch dim of
+    ``ops.flash_attention`` (Pallas kernel on TPU, blockwise online-softmax
+    ref elsewhere — the scores tensor never materializes beyond one tile).
+    Positions are lock-step 0..S-1 by construction on this path (ragged
+    prefill is capped at FLASH_THRESHOLD upstream); the sliding-window
+    band applies only to causal self-attention.
     """
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
@@ -200,53 +203,13 @@ def _flash_sdpa(q, k, v, q_pos, k_pos, cfg, causal: bool):
         v = jnp.repeat(v, G, axis=2)
     k = dist.constrain(k, ("dp", None, "tp", None))
     v = dist.constrain(v, ("dp", None, "tp", None))
-
-    Qc = min(FLASH_CHUNK, Sq)
-    Kc = min(FLASH_CHUNK, Sk)
-    assert Sq % Qc == 0 and Sk % Kc == 0, (Sq, Sk, Qc, Kc)
-    nq, nk = Sq // Qc, Sk // Kc
-    scale = hd ** -0.5
-
-    q5 = jnp.moveaxis(q.reshape(B, nq, Qc, H, hd), 1, 0).astype(cm.DTYPE)
-    k5 = jnp.moveaxis(k.reshape(B, nk, Kc, H, hd), 1, 0).astype(cm.DTYPE)
-    v5 = jnp.moveaxis(v.reshape(B, nk, Kc, H, hd), 1, 0).astype(cm.DTYPE)
-    qp = q_pos.reshape(nq, Qc)
-    kp = k_pos.reshape(nk, Kc)
-
-    def q_block(_, xs_q):
-        qb, qpb = xs_q                        # (B,Qc,H,hd), (Qc,)
-
-        def kv_block(carry, xs_k):
-            m, l, acc = carry
-            kb, vb, kpb = xs_k                # (B,Kc,H,hd), (Kc,)
-            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
-                           preferred_element_type=jnp.float32) * scale
-            if causal:
-                vis = kpb[None, :] <= qpb[:, None]
-                if cfg.sliding_window:
-                    vis &= kpb[None, :] > qpb[:, None] - cfg.sliding_window
-                s = jnp.where(vis[None, None], s, NEG_INF)
-            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[..., None])
-            if causal:
-                p = jnp.where(vis[None, None], p, 0.0)
-            corr = jnp.exp(m - m_new)
-            l = l * corr + jnp.sum(p, axis=-1)
-            acc = (acc * corr[..., None]
-                   + jnp.einsum("bhqk,bkhd->bhqd", p.astype(cm.DTYPE), vb,
-                                preferred_element_type=jnp.float32))
-            return (m_new, l, acc), ()
-
-        m0 = jnp.full((B, H, Qc), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((B, H, Qc), jnp.float32)
-        a0 = jnp.zeros((B, H, Qc, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (k5, v5, kp))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,H,Qc,hd)
-        return None, jnp.moveaxis(out, 1, 2)              # (B,Qc,H,hd)
-
-    _, blocks = jax.lax.scan(q_block, None, (q5, qp))     # (nq,B,Qc,H,hd)
-    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H * hd)
-    return out.astype(cm.DTYPE)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd).astype(cm.DTYPE)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd).astype(cm.DTYPE)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd).astype(cm.DTYPE)
+    window = cfg.sliding_window if causal else 0
+    out = kops.flash_attention(qf, kf, vf, causal=causal, window=window)
+    out = out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    return out.reshape(B, Sq, H * hd).astype(cm.DTYPE)
 
 
 def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
@@ -269,8 +232,7 @@ def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
     if kv is not None:                                   # cross-attention
         k, v = kv
         if q.shape[1] * k.shape[1] > FLASH_THRESHOLD ** 2:
-            out = _flash_sdpa(q, k, v, positions[0],
-                              jnp.arange(k.shape[1]), cfg, causal=False)
+            out = _flash(q, k, v, cfg, causal=False)
         else:
             bias = jnp.zeros((q.shape[1], k.shape[1]), jnp.float32)
             out = _sdpa(q, k, v, bias, cfg)
@@ -310,7 +272,7 @@ def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
         pos1 = positions[0]
         k, v = k_new, v_new
         if x.shape[1] > FLASH_THRESHOLD:
-            out = _flash_sdpa(q, k, v, pos1, pos1, cfg, causal=causal)
+            out = _flash(q, k, v, cfg, causal=causal)
         elif causal and cache is not None and positions.shape[0] > 1:
             # ragged serving prefill: rows carry different valid lengths
             # (padded positions == EMPTY_POS), so the mask is per-row;

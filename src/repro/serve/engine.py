@@ -43,8 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import dist
+from repro.apsim import metrics as apm
 from repro.core.policy import BudgetController, PrecisionPolicy
 from repro.dist import sharding as shd
+from repro.kernels import ops as kops
 from repro.models import lm
 
 TOPK_MAX = 64          # static top-k sort width; per-row k <= TOPK_MAX
@@ -74,7 +76,14 @@ class Request:
 
 @dataclasses.dataclass
 class RequestStats:
-    """Per-request serving record (the per-request half of ServeStats)."""
+    """Per-request serving record (the per-request half of ServeStats).
+
+    Besides wall-clock timing, each request carries its *priced* AP cost:
+    at admission the resolved per-layer bit vector is pushed through
+    ``apsim.metrics.price_bit_vector`` (the paper's calibrated cycle/energy
+    model), so every request reports the latency/energy/EDP it would cost
+    on the BF-IMNA hardware at its own precision — the Table 7
+    accuracy-vs-EDP trade-off, live per request."""
     rid: int
     prompt_len: int
     budget_s: float
@@ -84,10 +93,42 @@ class RequestStats:
     submitted_s: float = 0.0
     finished_s: float = 0.0
     done: bool = False
+    ap_cycles_per_token: float = 0.0
+    ap_energy_per_token_j: float = 0.0
+    ap_cost: Optional[apm.BitVectorCost] = None   # per-layer breakdown
 
     @property
     def n_tokens(self) -> int:
         return len(self.tokens)
+
+    @property
+    def processed_tokens(self) -> int:
+        """Tokens this request pushed through the model (prompt + new)."""
+        return self.prompt_len + self.n_tokens
+
+    @property
+    def latency_s(self) -> float:
+        """Wall-clock submit-to-finish latency (0.0 until done)."""
+        return max(self.finished_s - self.submitted_s, 0.0) if self.done \
+            else 0.0
+
+    @property
+    def ap_latency_s(self) -> float:
+        """Modeled AP latency for every processed token at this request's
+        precision configuration."""
+        if self.ap_cost is None:
+            return 0.0
+        return (self.processed_tokens * self.ap_cycles_per_token
+                / self.ap_cost.freq_hz)
+
+    @property
+    def ap_energy_j(self) -> float:
+        return self.processed_tokens * self.ap_energy_per_token_j
+
+    @property
+    def edp(self) -> float:
+        """Modeled AP energy-delay product (J·s) of the whole request."""
+        return self.ap_energy_j * self.ap_latency_s
 
 
 def _sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
@@ -151,6 +192,16 @@ class ServeEngine:
         self.stats = ServeStats()
         self.row_bits = cfg.family in lm.PER_ROW_BIT_FAMILIES
         self._key = jax.random.PRNGKey(seed)
+        # grouped per-row dispatch specializes one GEMM per *distinct*
+        # weight bit-width the controller can emit (kernels/ops.py); the
+        # family set is applied around every compiled call (trace-time)
+        wtab, _ = self.controller.stacked_tables()
+        self._families = tuple(sorted(
+            {min(max(int(v), 1), 8) for v in np.asarray(wtab).ravel()}))
+        # AP pricing of resolved bit vectors (per-request EDP accounting)
+        self._gemms = lm.layer_gemm_dims(cfg)
+        self._head_gemm = lm.head_gemm_dims(cfg)
+        self._price_cache: Dict[bytes, apm.BitVectorCost] = {}
 
         # ---- continuous-batching state (pool built lazily on first submit)
         self.pool: Optional[lm.CachePool] = None
@@ -225,9 +276,32 @@ class ServeEngine:
                 f"(supported: {lm.PER_ROW_BIT_FAMILIES})")
         return wv, av
 
-    def _mesh_ctx(self):
-        return (dist.use_mesh(self.mesh) if self.mesh is not None
-                else contextlib.nullcontext())
+    @contextlib.contextmanager
+    def _compute_ctx(self):
+        """Mesh placement + the controller's static bit-family set (both
+        trace-time properties of the engine's compiled programs)."""
+        mesh_ctx = (dist.use_mesh(self.mesh) if self.mesh is not None
+                    else contextlib.nullcontext())
+        with mesh_ctx, kops.bit_families(self._families):
+            yield
+
+    def price_bits(self, wv, av) -> apm.BitVectorCost:
+        """AP cycles/energy of one resolved (n_layers,) bit vector pair
+        (cached — the controller emits a small static set of vectors)."""
+        wv = np.asarray(wv, np.int64)
+        av = np.asarray(av, np.int64)
+        key = wv.tobytes() + b"|" + av.tobytes()
+        hit = self._price_cache.get(key)
+        if hit is None:
+            hit = apm.price_bit_vector(self._gemms, wv.tolist(), av.tolist(),
+                                       head=self._head_gemm)
+            self._price_cache[key] = hit
+        return hit
+
+    def price_budget(self, budget_s: float) -> apm.BitVectorCost:
+        """Per-token AP cost of the configuration a scalar budget selects."""
+        wv, av = self.controller.resolve(jnp.asarray(budget_s, jnp.float32))
+        return self.price_bits(wv, av)
 
     def _split_key(self, num: int):
         keys = jax.random.split(self._key, num + 1)
@@ -243,7 +317,7 @@ class ServeEngine:
                  ) -> jnp.ndarray:
         """Generate ``steps`` tokens for one synchronous batch; returns
         (B, steps) ids.  Greedy unless per-row temperature/top_k given."""
-        with self._mesh_ctx():
+        with self._compute_ctx():
             return self._generate(batch, steps, temperature, top_k, fused)
 
     def _generate(self, batch, steps, temperature, top_k, fused):
@@ -256,6 +330,9 @@ class ServeEngine:
         topk = jnp.zeros((B,), jnp.int32) if top_k is None else \
             jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
         wv, av = self._bits()
+        if self.mesh is not None:
+            wv, av = shd.shard_bits(wv, self.mesh), shd.shard_bits(av,
+                                                                   self.mesh)
         batch = shd.shard_batch(batch, self.mesh)
         cache = lm.empty_cache(self.cfg, B, self.max_len)
         if self.mesh is not None:
@@ -368,6 +445,10 @@ class ServeEngine:
             st = self.requests[req.rid]
             st.slot = slot
             st.mean_wbits = float(jnp.mean(wv.astype(jnp.float32)))
+            cost = self.price_bits(wv, av)      # AP pricing of this mix
+            st.ap_cost = cost
+            st.ap_cycles_per_token = cost.cycles
+            st.ap_energy_per_token_j = cost.energy_j
             st.tokens.append(int(first[0]))
             self.stats.tokens += 1
             self.stats.admitted += 1
@@ -400,7 +481,7 @@ class ServeEngine:
         """One scheduler tick: admit into free slots, decode one block,
         harvest tokens, retire finished requests.  Returns the rids that
         completed during this tick."""
-        with self._mesh_ctx():
+        with self._compute_ctx():
             return self._step()
 
     def _step(self) -> List[int]:
@@ -415,6 +496,9 @@ class ServeEngine:
         # which support per-row bits — so budgets are always per-slot
         budgets = jnp.asarray(self._budget, jnp.float32)          # (B,)
         wv, av = self.controller.resolve(budgets)
+        if self.mesh is not None:
+            wv, av = shd.shard_bits(wv, self.mesh), shd.shard_bits(av,
+                                                                   self.mesh)
         keys = self._split_key(self.decode_block)
         tok = jnp.asarray(self._tok[:, None], jnp.int32)
         t = jnp.asarray(self._t, jnp.int32)

@@ -1,0 +1,280 @@
+"""Kernel-dispatch parity: the serve compute path now lives in
+kernels/ops.py — it must be BIT-EXACT against the pre-refactor inline
+math (the `_apply_linear1` serve branch, kept verbatim below as the
+oracle), and grouped per-row dispatch must be bit-exact against the
+per-row vmap baseline, for int8 and packed-int4 containers alike."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bitfluid as bf
+from repro.kernels import ops, ref
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# Oracles: the pre-refactor inline serve math, verbatim.
+# ---------------------------------------------------------------------------
+
+def _inline_serve_linear(p, x, wbits, abits):
+    if "q4" in p:
+        qw = bf.unpack_int4_halves(p["q4"])
+        from_bits = 4
+    else:
+        qw, from_bits = p["q"], 8
+    w_q = bf.requant_shift(qw, wbits, from_bits=from_bits)
+    w_s = bf.effective_scale(p["s"], wbits, from_bits=from_bits)
+    x2 = x.astype(jnp.float32)
+    x_scale = bf.symmetric_scale(x2, abits)
+    x_q = bf.quantize(x2, x_scale, abits)
+    acc = jax.lax.dot_general(
+        x_q, w_q, dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * x_scale * w_s
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(cm.DTYPE)
+
+
+def _inline_vmap(p, x, wbits, abits):
+    B = x.shape[0]
+    wb = jnp.broadcast_to(jnp.asarray(wbits, jnp.int32), (B,))
+    ab = jnp.broadcast_to(jnp.asarray(abits, jnp.int32), (B,))
+    return jax.vmap(lambda xr, w, a: _inline_serve_linear(p, xr, w, a))(
+        x, wb, ab)
+
+
+def _container(rng, container, K=64, N=48, bias=True):
+    w = jnp.asarray((rng.normal(size=(K, N)) * 0.1).astype(np.float32))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    return cm.quantize_linear(p, container)
+
+
+def _f32(x):
+    return np.asarray(x, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-bits parity (the container path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("container", ["int8", "int4"])
+@pytest.mark.parametrize("wbits", [2, 4, 8])
+def test_scalar_bits_parity(rng, container, wbits):
+    p = _container(rng, container)
+    x = jnp.asarray(rng.normal(size=(3, 5, 64)).astype(np.float32))
+    got = cm.apply_linear(p, x, wbits, 8)
+    want = _inline_serve_linear(p, x, wbits, 8)
+    np.testing.assert_array_equal(_f32(got), _f32(want))
+
+
+@pytest.mark.parametrize("container", ["int8", "int4"])
+def test_traced_scalar_bits_parity(rng, container):
+    """(L,)-vector bits arrive in models as traced scalars via scan; the
+    dispatch must stay bit-exact when bits are runtime tensors."""
+    p = _container(rng, container)
+    x = jnp.asarray(rng.normal(size=(2, 4, 64)).astype(np.float32))
+
+    @jax.jit
+    def run(wb, ab):
+        return cm.apply_linear(p, x, wb, ab)
+
+    for wb in (2, 4, 8):
+        got = run(jnp.asarray(wb, jnp.int32), jnp.asarray(8, jnp.int32))
+        want = _inline_serve_linear(p, x, wb, 8)
+        np.testing.assert_array_equal(_f32(got), _f32(want))
+
+
+# ---------------------------------------------------------------------------
+# Per-row bits: grouped dispatch vs the vmap baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("container", ["int8", "int4"])
+@pytest.mark.parametrize("seq", [1, 4])
+def test_grouped_dispatch_matches_vmap_oracle(rng, container, seq):
+    p = _container(rng, container)
+    x = jnp.asarray(rng.normal(size=(6, seq, 64)).astype(np.float32))
+    wb = jnp.asarray([2, 4, 8, 8, 4, 2], jnp.int32)
+    ab = jnp.asarray([8, 8, 4, 8, 2, 8], jnp.int32)
+    got = cm.apply_linear(p, x, wb, ab)
+    want = _inline_vmap(p, x, wb, ab)
+    np.testing.assert_array_equal(_f32(got), _f32(want))
+    # and through ops' own vmap baseline
+    with ops.row_dispatch("vmap"):
+        base = cm.apply_linear(p, x, wb, ab)
+    np.testing.assert_array_equal(_f32(base), _f32(want))
+
+
+def test_grouped_dispatch_scalar_abits_vector_wbits(rng):
+    p = _container(rng, "int8")
+    x = jnp.asarray(rng.normal(size=(4, 2, 64)).astype(np.float32))
+    wb = jnp.asarray([8, 4, 4, 8], jnp.int32)
+    got = cm.apply_linear(p, x, wb, 8)
+    want = _inline_vmap(p, x, wb, 8)
+    np.testing.assert_array_equal(_f32(got), _f32(want))
+
+
+def test_narrowed_families_stay_exact_and_snap_up(rng):
+    """An engine narrows the family set to its controller's bits: values
+    in the set stay exact; out-of-set values snap UP to the next family."""
+    p = _container(rng, "int8", bias=False)
+    x = jnp.asarray(rng.normal(size=(4, 1, 64)).astype(np.float32))
+    wb = jnp.asarray([4, 8, 4, 8], jnp.int32)
+    with ops.bit_families((4, 8)):
+        got = cm.apply_linear(p, x, wb, 8)
+    np.testing.assert_array_equal(_f32(got), _f32(_inline_vmap(p, x, wb, 8)))
+    with ops.bit_families((4, 8)):
+        snapped = cm.apply_linear(p, x, jnp.asarray([3, 3, 3, 3], jnp.int32),
+                                  8)
+    np.testing.assert_array_equal(
+        _f32(snapped),
+        _f32(_inline_vmap(p, x, jnp.asarray([4, 4, 4, 4], jnp.int32), 8)))
+
+
+def test_bit_families_context_restores():
+    before = ops.get_bit_families()
+    with ops.bit_families((4, 8)):
+        assert ops.get_bit_families() == (4, 8)
+    assert ops.get_bit_families() == before
+    with pytest.raises(ValueError):
+        ops.set_bit_families(())
+    with pytest.raises(ValueError):
+        ops.set_row_dispatch("loop")
+    assert ops.get_row_dispatch() == "grouped"
+
+
+def test_grouped_dispatch_zero_retrace(rng):
+    """Family membership is data: changing the per-row bit mix never
+    retraces the jitted caller."""
+    p = _container(rng, "int8")
+    x = jnp.asarray(rng.normal(size=(4, 1, 64)).astype(np.float32))
+    traces = []
+
+    @jax.jit
+    def run(wb):
+        traces.append(1)
+        return cm.apply_linear(p, x, wb, 8)
+
+    for mix in ([2, 4, 6, 8], [8, 8, 8, 8], [4, 2, 4, 2]):
+        run(jnp.asarray(mix, jnp.int32)).block_until_ready()
+    assert len(traces) == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: _blocks_for + int4 alignment behavior
+# ---------------------------------------------------------------------------
+
+def test_blocks_for_shrinks_all_dims():
+    assert ops._blocks_for(512, 512, 512) == (128, 128, 128)
+    assert ops._blocks_for(64, 32, 16) == (64, 32, 16)
+    assert ops._blocks_for(1, 2, 3) == (8, 8, 8)        # floor at 8
+    assert ops._blocks_for(100, 72, 200) == (128, 128, 128)  # next pow2 >= 128
+
+
+def test_int4_matmul_unaligned_falls_back(rng):
+    """Packed-column padding would split nibble halves; the dispatcher
+    must fall back to ref instead of crashing (the old assert)."""
+    M, K, N = 16, 64, 72                    # N/2 = 36 does not tile
+    x = rng.integers(-127, 128, (M, K)).astype(np.int8)
+    q4 = rng.integers(-8, 8, (K, N)).astype(np.int8)
+    packed = bf.pack_int4_halves(jnp.asarray(q4))
+    s = rng.uniform(0.001, 0.05, (1, N)).astype(np.float32)
+    got = ops.int4_matmul(jnp.asarray(x), packed, jnp.asarray(s),
+                          interpret=True)
+    want = (x.astype(np.int64) @ q4.astype(np.int64)).astype(np.float32) * s
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_int4_matmul_bad_shapes_raise(rng):
+    x = jnp.asarray(rng.integers(-10, 10, (8, 64)).astype(np.int8))
+    packed = jnp.zeros((32, 16), jnp.uint8)             # K=32 != 64
+    with pytest.raises(ValueError, match="K"):
+        ops.int4_matmul(x, packed, jnp.ones((1, 32)))
+    packed = jnp.zeros((64, 16), jnp.uint8)             # N = 32
+    with pytest.raises(ValueError, match="scale"):
+        ops.int4_matmul(x, packed, jnp.ones((1, 7)))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: chunked ref + model routing through the dispatcher
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 24)])
+def test_flash_chunked_ref_matches_oracle(rng, causal, window):
+    q = jnp.asarray(rng.normal(size=(2, 100, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 80, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 80, 32)), jnp.float32)
+    got = ref.flash_attention_chunked_ref(q, k, v, causal=causal,
+                                          window=window, chunk=32)
+    want = ref.flash_attention_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_long_seq_attention_routes_through_ops(rng, monkeypatch):
+    """No flash math inline in models/: above FLASH_THRESHOLD the
+    attention block must reach ops.flash_attention, and its output must
+    match the short-path masked SDPA."""
+    from repro import configs
+    from repro.models import transformer as tf
+
+    cfg = configs.get_smoke("qwen3_4b")
+    p = tf.attn_init(jax.random.PRNGKey(0), cfg)
+    S = 32
+    x = jnp.asarray(rng.normal(size=(2, S, cfg.d_model)) * 0.1, cm.DTYPE)
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+
+    calls = []
+    orig = ops.flash_attention
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(tf.kops, "flash_attention", spy)
+    monkeypatch.setattr(tf, "FLASH_THRESHOLD", 16)
+    out_flash, _ = tf.attention(p, x, cfg, positions=positions)
+    assert len(calls) == 1
+    monkeypatch.setattr(tf, "FLASH_THRESHOLD", 2048)
+    out_sdpa, _ = tf.attention(p, x, cfg, positions=positions)
+    np.testing.assert_allclose(_f32(out_flash), _f32(out_sdpa),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# EDP pricing (apsim.metrics.price_bit_vector)
+# ---------------------------------------------------------------------------
+
+def test_price_bit_vector_scales_with_bits():
+    from repro.apsim import metrics as apm
+
+    gemms = (((64, 128), (128, 64)),) * 4
+    c8 = apm.price_bit_vector(gemms, [8] * 4, [8] * 4)
+    c4 = apm.price_bit_vector(gemms, [4] * 4, [4] * 4)
+    assert len(c8.per_layer_cycles) == len(c8.per_layer_energy_j) == 4
+    assert 0 < c4.energy_j < c8.energy_j
+    assert 0 < c4.cycles < c8.cycles
+    assert 0 < c4.edp < c8.edp
+    mixed = apm.price_bit_vector(gemms, [4, 8, 4, 8], [8] * 4)
+    assert c4.energy_j < mixed.energy_j < c8.energy_j
+    with_head = apm.price_bit_vector(gemms, [8] * 4, [8] * 4,
+                                     head=(64, 512))
+    assert len(with_head.per_layer_cycles) == 5
+    assert with_head.cycles > c8.cycles
+    with pytest.raises(ValueError):
+        apm.price_bit_vector(gemms, [8] * 3, [8] * 4)
+
+
+def test_layer_gemm_dims_cover_bit_slots():
+    from repro import configs
+    from repro.models import lm
+
+    for arch in ("qwen3_4b", "mamba2_1_3b", "zamba2_2_7b",
+                 "seamless_m4t_medium", "kimi_k2_1t_a32b"):
+        cfg = configs.get_smoke(arch)
+        gemms = lm.layer_gemm_dims(cfg)
+        assert len(gemms) == lm.n_bit_slots(cfg), arch
+        assert all(K > 0 and N > 0 for per in gemms for K, N in per), arch

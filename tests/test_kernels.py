@@ -83,6 +83,8 @@ def test_fluid_linear_precision_cost_scaling(rng):
         rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.skipif(ops.use_pallas(),
+                    reason="dispatch forced to Pallas (REPRO_PALLAS)")
 def test_dispatch_uses_ref_on_cpu(rng):
     """Off-TPU without interpret, ops route through XLA ref (same math)."""
     x = rng.integers(-10, 10, (64, 128)).astype(np.int8)

@@ -232,3 +232,35 @@ def test_fused_equals_unfused_decode(served):
     fused = np.asarray(eng.generate(batch, steps=6))
     loop = np.asarray(eng.generate(batch, steps=6, fused=False))
     np.testing.assert_array_equal(fused, loop)
+
+
+def test_per_request_edp_accounting(served):
+    """Every request's resolved bit vector is priced into AP cycles/energy
+    (apsim.costmodel), so RequestStats reports per-request latency/EDP —
+    the Table 7 accuracy-vs-EDP trade-off at request granularity."""
+    eng = _engine(served, n_slots=2, prefill_len=8, decode_block=4)
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int64)
+    r8 = eng.submit(prompt, max_new_tokens=4, budget_s=10.0)
+    r4 = eng.submit(prompt, max_new_tokens=4, budget_s=0.4)
+    res = eng.run()
+    s8, s4 = res[r8], res[r4]
+    assert s4.ap_energy_per_token_j < s8.ap_energy_per_token_j
+    assert s4.ap_cycles_per_token < s8.ap_cycles_per_token
+    assert 0 < s4.edp < s8.edp
+    assert s8.latency_s > 0 and s4.latency_s > 0
+    # per-layer breakdown: one entry per bit slot + the logits head
+    assert len(s8.ap_cost.per_layer_cycles) == eng.n_layers + 1
+    assert s8.ap_latency_s == pytest.approx(
+        s8.processed_tokens * s8.ap_cycles_per_token / s8.ap_cost.freq_hz)
+    assert s8.ap_energy_j == pytest.approx(
+        s8.processed_tokens * s8.ap_energy_per_token_j)
+    # identical bit vectors hit the pricing cache (one object, shared)
+    r8b = eng.submit(prompt, max_new_tokens=2, budget_s=10.0)
+    assert eng.run()[r8b].ap_cost is s8.ap_cost
+
+
+def test_engine_families_follow_controller(served):
+    """The grouped dispatch family set is derived from the controller's
+    registered configurations (4- and 8-bit here)."""
+    eng = _engine(served)
+    assert eng._families == (4, 8)

@@ -90,3 +90,16 @@ def test_opt_int8_codec_mirrors_params():
         keys = tuple(str(getattr(q, "key", q)) for q in path)
         if keys[-1] == "q":
             assert p_flat[keys[:-1]].shape == leaf.shape
+
+
+def test_bits_specs_and_off_mesh_identity():
+    """Per-request (B, L) bit matrices shard batch over dp; (L,) tables
+    replicate; without a mesh shard_bits is the identity."""
+    spec = logical_to_mesh(MESH, shd.bits_pspec(np.zeros((32, 4))), (32, 4))
+    assert spec == P("data", None)
+    spec = logical_to_mesh(MESH, shd.bits_pspec(np.zeros((30, 4))), (30, 4))
+    assert spec == P(None, None)                  # non-dividing B replicates
+    spec = logical_to_mesh(MESH, shd.bits_pspec(np.zeros((4,))), (4,))
+    assert spec == P(None)
+    bits = np.zeros((4,), np.int32)
+    assert shd.shard_bits(bits) is bits
