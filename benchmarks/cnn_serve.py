@@ -1,0 +1,103 @@
+"""Serve-form CNN inference smoke: ResNet18 through the kernel dispatch
+layer, fixed vs HAWQ-V3 budgets, fake-quant vs serve-form throughput.
+
+What this guards (rc != 0 on failure):
+  * ONE compiled program serves every budget mix — fixed budgets, all
+    five HAWQ-V3 constraints, and per-request mixed batches — with
+    trace-count == 1 (the zero-retrace claim of the CNN serve path);
+  * per-request EDP ordering: rows resolved to int8 price strictly above
+    rows resolved to int4 (the Table VII trade-off, live per image).
+
+Throughput of the retained fake-quant path vs the serve-form kernel path
+is recorded (not gated — on CPU the int8 emulation has no MXU to win on;
+the number tracks the dispatch overhead trend in BENCH_smoke.json).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+IMAGE = 32
+BATCH = 8
+REPS = 3
+LAST_RESULTS: dict = {}
+
+
+def _bench(fn, *args):
+    np.asarray(fn(*args))                             # warm the trace
+    best = float("inf")
+    for _ in range(REPS):                             # best-of-N: CI hosts
+        t0 = time.perf_counter()                      # are noisy neighbors
+        np.asarray(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return BATCH / best
+
+
+def main() -> int:
+    from repro.apsim.workloads import gemm_layers
+    from repro.core import policy as pol
+    from repro.models import cnn
+    from repro.serve.cnn import CNNServeEngine
+
+    key = jax.random.PRNGKey(0)
+    params, layers = cnn.init_cnn("resnet18", key, image=IMAGE)
+    n = len(gemm_layers(layers))
+    x = jax.random.normal(key, (BATCH, IMAGE, IMAGE, 3), jnp.float32)
+
+    ctrl = pol.cnn_budget_controller("resnet18", layers=layers)
+    eng = CNNServeEngine(params, layers, controller=ctrl, max_batch=BATCH)
+    preds = {k: ctrl.predicted_latency_s[k] for k in ctrl.order()}
+    lo = preds["hawqv3-int4"] * 1.01                  # fits int4 only
+    hi = preds["hawqv3-int8"] * 1.01                  # fits everything
+
+    # ---- every budget regime through ONE compiled program ----------------
+    ok = True
+    for name, budgets in [
+        ("fixed-int4", lo), ("fixed-int8", hi),
+        ("hawq-mixed", [lo if i % 2 else hi for i in range(BATCH)]),
+        ("hawq-medium", preds["hawqv3-medium"] * 1.01),
+    ]:
+        logits, stats = eng.serve(x, budgets)
+        ok &= bool(np.isfinite(logits).all())
+        mean_b = sum(s.mean_wbits for s in stats) / len(stats)
+        print(f"{name:12s} mean_wbits={mean_b:.2f} "
+              f"edp[0]={stats[0].edp:.3e} J·s")
+    traces = eng.stats.forward_traces
+    ok &= traces == 1
+    print(f"forward traces across all budget regimes: {traces} (want 1)")
+
+    # ---- per-request EDP ordering on the mixed batch ---------------------
+    _, stats = eng.serve(x, [lo if i % 2 else hi for i in range(BATCH)])
+    edp8 = float(np.mean([s.edp for s in stats if s.mean_wbits == 8.0]))
+    edp4 = float(np.mean([s.edp for s in stats if s.mean_wbits == 4.0]))
+    ok &= 0 < edp4 < edp8
+    print(f"per-request EDP: int8 rows {edp8:.3e} | int4 rows {edp4:.3e} "
+          f"({edp8 / edp4:.1f}x)")
+
+    # ---- fake-quant vs serve-form throughput (recorded, not gated) -------
+    wv = jnp.full((n,), 8, jnp.int32)
+    fq_fwd = jax.jit(lambda p, xx, v: cnn.cnn_forward(p, xx, layers, v, v))
+    fq_ips = _bench(fq_fwd, params, x, wv)
+    serve_ips = _bench(lambda xx, b: eng.serve(xx, b)[0], x, hi)
+    print(f"throughput @B={BATCH}: fake-quant {fq_ips:7.1f} img/s | "
+          f"serve-form {serve_ips:7.1f} img/s "
+          f"({serve_ips / fq_ips:4.2f}x)")
+
+    LAST_RESULTS.clear()
+    LAST_RESULTS.update({
+        "image": IMAGE, "batch": BATCH,
+        "forward_traces": traces,
+        "edp_int8_mean_js": edp8, "edp_int4_mean_js": edp4,
+        "fakequant_img_s": round(fq_ips, 1),
+        "serve_img_s": round(serve_ips, 1),
+        "serve_vs_fakequant": round(serve_ips / fq_ips, 3),
+    })
+    print(f"claim (one program, EDP ordered): {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,10 +26,10 @@ def main(argv=None) -> int:
                     help="where --smoke writes its record")
     args = ap.parse_args(argv)
 
-    from benchmarks import (calibrate, fig5_runtimes, fig6_technology,
-                            fig7_dse, fig8_breakdown, grouped_dispatch,
-                            roofline, serve_throughput, table7_bitfluid,
-                            table8_sota)
+    from benchmarks import (calibrate, cnn_serve, fig5_runtimes,
+                            fig6_technology, fig7_dse, fig8_breakdown,
+                            grouped_dispatch, roofline, serve_throughput,
+                            table7_bitfluid, table8_sota)
     mods = [
         ("calibrate", calibrate),
         ("fig5_runtimes", fig5_runtimes),
@@ -40,6 +40,7 @@ def main(argv=None) -> int:
         ("table8_sota", table8_sota),
         ("serve_throughput", serve_throughput),
         ("grouped_dispatch", grouped_dispatch),
+        ("cnn_serve", cnn_serve),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))

@@ -1,6 +1,10 @@
-"""Table VII end-to-end: HAWQ-V3's per-layer INT4/INT8 ResNet18 configs run
-through (a) the JAX CNN at those precisions (functional path) and (b) the
-BF-IMNA simulator (hardware cost path) — accuracy proxy vs EDP trade-off.
+"""Table VII end-to-end, through the REAL kernels: HAWQ-V3's per-layer
+INT4/INT8 ResNet18 configs run (a) the serve-form CNN — weights quantized
+once into int8 containers, every conv-as-GEMM dispatched through
+``ops.serve_linear`` with the bit vector as a traced input, all five
+configs in ONE compiled program — and (b) the BF-IMNA simulator (hardware
+cost path): accuracy proxy vs EDP trade-off, plus a mixed-budget batch
+through the CNN serving engine with per-request EDP.
 
   PYTHONPATH=src python examples/mixed_precision_resnet18.py
 """
@@ -12,7 +16,9 @@ from repro.apsim.energy import SRAM
 from repro.apsim.mapper import LR_CONFIG, simulate_network
 from repro.apsim.workloads import (HAWQV3_METADATA, HAWQV3_RESNET18,
                                    per_layer_bits, resnet18)
+from repro.core import policy as pol
 from repro.models import cnn
+from repro.serve.cnn import CNNServeEngine, hawq_fidelity_sweep
 
 
 def main():
@@ -20,33 +26,41 @@ def main():
     params, layers = cnn.init_cnn("resnet18", key, image=32)
     x = jax.random.normal(key, (4, 32, 32, 3), jnp.float32)
 
-    # fp reference output distribution
-    ref = jax.nn.softmax(cnn.cnn_forward(params, x, layers), axis=-1)
+    # functional: quantize/prepack once, run every HAWQ config through
+    # the serve-form kernels in ONE compiled program (fidelity vs fp)
+    fid, traces = hawq_fidelity_sweep(image=32, batch=4)
 
     sim_layers = resnet18()
     print(f"{'config':8s} {'avg_b':>6s} {'fidelity':>9s} "
           f"{'EDP(J.s)':>10s} {'norm_E':>7s} {'top1[53]':>8s}")
     base = simulate_network(sim_layers, LR_CONFIG, SRAM, bits=8)
-    fwd = jax.jit(lambda p, x, wv, av: cnn.cnn_forward(p, x, layers,
-                                                       wv, av),
-                  static_argnums=())
     for name in ("int4", "low", "medium", "high", "int8"):
         vec = HAWQV3_RESNET18[name]
-        bits = per_layer_bits(sim_layers, vec)
-        # functional: run the CNN at these bits; fidelity = agreement with fp
-        wv = jnp.asarray(bits, jnp.int32)
-        out = jax.nn.softmax(cnn.cnn_forward(params, x, layers, wv, wv),
-                             axis=-1)
-        fidelity = float(1.0 - 0.5 * jnp.abs(out - ref).sum(-1).mean())
         # hardware: the paper's simulator on the same bit vector
-        rep = simulate_network(sim_layers, LR_CONFIG, SRAM, bits=bits,
-                               network="resnet18")
+        rep = simulate_network(sim_layers, LR_CONFIG, SRAM,
+                               bits=list(vec), network="resnet18")
         meta = HAWQV3_METADATA[name]
-        print(f"{name:8s} {np.mean(bits):6.2f} {fidelity:9.4f} "
-              f"{rep.edp:10.3e} {rep.energy_j / base.energy_j:7.3f} "
-              f"{meta['top1']:8.2f}")
-    print("\nhigher bits -> higher fidelity & higher EDP: the Table VII "
-          "trade-off, reproduced functionally AND in hardware cost.")
+        print(f"{name:8s} {np.mean(per_layer_bits(layers, vec)):6.2f} "
+              f"{fid[name]:9.4f} {rep.edp:10.3e} "
+              f"{rep.energy_j / base.energy_j:7.3f} {meta['top1']:8.2f}")
+    print(f"\nall five configs ran through ONE compiled serve program "
+          f"(traces={traces}); higher bits -> higher fidelity & "
+          f"higher EDP: the Table VII trade-off through the real kernels.")
+
+    # ---- batched serving: per-image budgets -> per-request EDP ----------
+    ctrl = pol.cnn_budget_controller("resnet18", layers=layers)
+    eng = CNNServeEngine(params, layers, controller=ctrl, max_batch=4)
+    preds = ctrl.predicted_latency_s
+    budgets = [preds["hawqv3-int4"] * 1.01, preds["hawqv3-medium"] * 1.01,
+               preds["hawqv3-high"] * 1.01, preds["hawqv3-int8"] * 1.01]
+    logits, stats = eng.serve(x, budgets)
+    print(f"\nmixed-budget batch (EDP budgets, J·s) — "
+          f"forward traces: {eng.stats.forward_traces}")
+    for s in stats:
+        print(f"  img{s.index}: budget={s.budget:.2e} "
+              f"mean_wbits={s.mean_wbits:.2f} "
+              f"ap_latency={s.ap_latency_s * 1e6:7.1f}us "
+              f"ap_energy={s.ap_energy_j * 1e3:6.3f}mJ edp={s.edp:.3e}")
 
 
 if __name__ == "__main__":

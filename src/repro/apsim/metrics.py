@@ -26,7 +26,7 @@ from typing import Optional, Sequence, Tuple
 
 from repro.apsim.energy import TechParams, SRAM
 from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, _gemm_layer, area_mm2
-from repro.apsim.workloads import fc
+from repro.apsim.workloads import Layer, fc, gemm_layers
 
 
 def peak_cycles(M: int) -> float:
@@ -118,15 +118,38 @@ def gemv_cost(K: int, N: int, Mw: int, Ma: int, *,
     return rep.cycles, rep.energy_j
 
 
-def price_bit_vector(gemms: Sequence[Sequence[Tuple[int, int]]],
+@functools.lru_cache(maxsize=4096)
+def layer_gemm_cost(layer: Layer, Mw: int, Ma: int, *,
+                    cfg: BFIMNAConfig = LR_CONFIG,
+                    tech: TechParams = SRAM) -> Tuple[float, float]:
+    """(cycles, energy_j) of one full conv/fc GEMM layer at (Mw, Ma) —
+    the CNN serve path's per-image pricing unit: the layer's (i, j, u)
+    GEMM through the same calibrated mapping the paper benchmarks use
+    (``mapper._gemm_layer``, paper batch size 1).  Cached per distinct
+    (layer, bits) pair, like :func:`gemv_cost`."""
+    rep = _gemm_layer(cfg, tech, layer, Mw, Ma)
+    return rep.cycles, rep.energy_j
+
+
+def network_gemms(layers: Sequence[Layer]) -> Tuple[Tuple[Layer, ...], ...]:
+    """Per-bit-slot pricing entries for a CNN workload: one conv/fc
+    :class:`Layer` per slot — ``price_bit_vector`` prices Layer items
+    through :func:`layer_gemm_cost` (full conv-as-GEMM cost) alongside
+    plain (K, N) GEMV pairs (the LM serve path)."""
+    return tuple((l,) for l in gemm_layers(list(layers)))
+
+
+def price_bit_vector(gemms: Sequence[Sequence],
                      wvec: Sequence[int], avec: Sequence[int], *,
                      head: Optional[Tuple[int, int]] = None,
                      cfg: BFIMNAConfig = LR_CONFIG,
                      tech: TechParams = SRAM) -> BitVectorCost:
-    """Price a resolved per-layer bit vector against its model's GEMVs.
+    """Price a resolved per-layer bit vector against its model's GEMMs.
 
-    ``gemms``: one sequence of (K, N) pairs per bit slot (see
-    ``lm.layer_gemm_dims``); ``head``, when given, is priced at the last
+    ``gemms``: one sequence of GEMM descriptors per bit slot — (K, N)
+    pairs for serve GEMVs (see ``lm.layer_gemm_dims``) or workload
+    :class:`Layer` records for full conv/fc GEMMs (see
+    :func:`network_gemms`); ``head``, when given, is priced at the last
     slot's bits (the logits-GEMM rule) and appended as a trailing entry.
     Bits clamp into [1, 16] (>= 16 is the fp sentinel).
     """
@@ -138,8 +161,12 @@ def price_bit_vector(gemms: Sequence[Sequence[Tuple[int, int]]],
     for dims, w, a in zip(gemms, wvec, avec):
         Mw, Ma = _clamp_bits(w), _clamp_bits(a)
         c = e = 0.0
-        for K, N in dims:
-            ci, ei = gemv_cost(K, N, Mw, Ma, cfg=cfg, tech=tech)
+        for item in dims:
+            if isinstance(item, Layer):
+                ci, ei = layer_gemm_cost(item, Mw, Ma, cfg=cfg, tech=tech)
+            else:
+                K, N = item
+                ci, ei = gemv_cost(K, N, Mw, Ma, cfg=cfg, tech=tech)
             c += ci
             e += ei
         cyc.append(c)

@@ -213,8 +213,17 @@ HAWQV3_METADATA = {
 
 
 def per_layer_bits(layers: List[Layer], vec: List[int]) -> List[int]:
-    """Expand a Table-VII bit vector over the network's GEMM layers."""
+    """Expand a Table-VII bit vector over the network's GEMM layers.
+
+    Short vectors extend with their last entry (the paper's rule); a
+    vector LONGER than the network's GEMM-layer count is a config/network
+    mismatch and raises instead of silently dropping its tail."""
     gl = gemm_layers(layers)
+    if len(vec) > len(gl):
+        raise ValueError(
+            f"bit vector of length {len(vec)} exceeds the network's "
+            f"{len(gl)} GEMM (conv/fc) layers — wrong network for this "
+            f"configuration?")
     out = []
     for idx in range(len(gl)):
         out.append(vec[idx] if idx < len(vec) else vec[-1])

@@ -74,6 +74,68 @@ def hawq_v3(constraint: str) -> PrecisionPolicy:
     return per_layer(tab, name=f"hawqv3-{constraint}")
 
 
+def cnn_budget_controller(network: str = "resnet18",
+                          constraints: Sequence[str] = ("int4", "low",
+                                                        "medium", "high",
+                                                        "int8"),
+                          *, layers=None,
+                          configs: Optional[Dict[str, PrecisionPolicy]] = None,
+                          metric: str = "edp") -> "BudgetController":
+    """A :class:`BudgetController` for a CNN workload, with predicted
+    per-image costs from the calibrated AP model
+    (``apsim.mapper.simulate_network``).
+
+    ``configs`` defaults to the paper's Table VII HAWQ-V3 ResNet18
+    mixes (``constraints`` picks which) — those per-layer vectors only
+    fit ResNet-shaped networks, so for AlexNet/VGG16 pass explicit
+    policies (e.g. ``{"int4": fixed(4), "int8": fixed(8)}``).  Every
+    policy table is validated against the network's GEMM-layer count
+    and priced on its fully-expanded vector.
+
+    On the AP, latency is nearly FLAT across precisions (Table VII:
+    <1% spread — bit-serial columns), so a latency budget cannot
+    discriminate configurations; energy, and hence EDP, is the axis a
+    CNN budget meaningfully constrains.  ``metric`` therefore defaults
+    to ``"edp"``: the controller's prediction table holds modeled
+    per-image EDP (J*s) and a request's ``budget_s`` is an EDP budget
+    (``"energy"`` (J) and ``"latency"`` (s) also accepted); the chosen
+    axis is recorded on ``BudgetController.budget_axis``.  Selection
+    semantics are unchanged: the most accurate configuration whose
+    predicted cost fits the budget, else the cheapest.
+    """
+    import numpy as np
+
+    from repro.apsim.energy import SRAM
+    from repro.apsim.mapper import LR_CONFIG, simulate_network
+    from repro.apsim.workloads import NETWORKS, gemm_layers
+
+    lay = list(layers) if layers is not None else NETWORKS[network]()
+    n = len(gemm_layers(lay))
+    if metric not in ("edp", "energy", "latency"):
+        raise ValueError(f"metric must be edp/energy/latency, got {metric!r}")
+    if configs is None:
+        configs = {}
+        for c in constraints:
+            p = hawq_v3(c)
+            configs[p.name] = p
+    pred = {}
+    for name, p in configs.items():
+        if len(p.weight_bits) > n:
+            raise ValueError(
+                f"policy {p.name!r} assigns {len(p.weight_bits)} layers "
+                f"but {network!r} has {n} GEMM (conv/fc) layers — the "
+                f"HAWQ-V3 defaults are ResNet18 vectors; pass explicit "
+                f"``configs`` for this network")
+        wv, av = p.vectors(n)
+        rep = simulate_network(lay, LR_CONFIG, SRAM,
+                               bits=[int(b) for b in np.asarray(wv)],
+                               act_bits=[int(b) for b in np.asarray(av)],
+                               network=network)
+        pred[name] = {"edp": rep.edp, "energy": rep.energy_j,
+                      "latency": rep.latency_s}[metric]
+    return BudgetController(configs, pred, n, budget_axis=metric)
+
+
 # ---------------------------------------------------------------------------
 # Dynamic switching (run-time bit fluidity)
 # ---------------------------------------------------------------------------
@@ -90,6 +152,12 @@ class BudgetController:
     configs: Dict[str, PrecisionPolicy]
     predicted_latency_s: Dict[str, float]
     n_layers: int
+    # which axis the prediction table (and hence request budgets) lives
+    # on: "latency" (seconds, the LM engines), or "energy" (J) / "edp"
+    # (J*s) for CNN controllers (see cnn_budget_controller) — selection
+    # semantics are identical, but budgets on the wrong axis always- or
+    # never-fit, so the axis is recorded on the controller itself.
+    budget_axis: str = "latency"
 
     def order(self):
         return sorted(self.configs, key=lambda k: self.predicted_latency_s[k])

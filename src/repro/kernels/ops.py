@@ -339,6 +339,37 @@ def serve_linear(p: dict, x: jnp.ndarray, wbits=8, abits=8, *,
                         interpret=interpret)
 
 
+def serve_linear_stacked(p: dict, x: jnp.ndarray, wbits=8, abits=8, *,
+                         stack_bits: bool = False,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Stacked serve-form linears: containers carry a leading stack axis.
+
+    ``p``: ``{"q": (G, K, N), "s": (G, 1, N)}`` — G independent weight
+    matrices applied slice-wise to ``x`` ``(G, ..., K)`` in ONE batched
+    GEMM (MoE expert stacks, grouped-conv group stacks) instead of a
+    per-slice Python loop.  Each slice's weights differ, so the
+    per-slice requant is NOT redundant (unlike per-row bits over shared
+    weights); every slice still reaches the kernel layer through
+    :func:`serve_linear` under vmap.
+
+    ``stack_bits=False`` (default): ``wbits`` is shared by every stack —
+    a scalar, or a per-row ``(B,)`` vector when ``x`` is ``(G, B, ...,
+    K)`` (each slice then takes the bit-grouped batch path).
+    ``stack_bits=True``: ``wbits`` is a ``(G,)`` vector, one width per
+    stack (MoE per-expert precision).  Biases are not stacked — callers
+    apply a full-width bias after recombining slices.
+    """
+    interpret = _interp(interpret)
+    if stack_bits:
+        wb = jnp.broadcast_to(jnp.asarray(wbits, jnp.int32), (x.shape[0],))
+        return jax.vmap(
+            lambda pp, xx, b: serve_linear(pp, xx, b, abits,
+                                           interpret=interpret))(p, x, wb)
+    return jax.vmap(
+        lambda pp, xx: serve_linear(pp, xx, wbits, abits,
+                                    interpret=interpret))(p, x)
+
+
 def _family_index(wb: jnp.ndarray, fams) -> jnp.ndarray:
     """Index of the smallest family >= wb (clamped into the family range) —
     exact whenever wb is in the set, snap-up otherwise."""

@@ -6,18 +6,37 @@ Faithful to BF-IMNA's mapping (§II.C): every convolution lowers to
 as the LM stacks, so HAWQ-V3's per-layer bit vectors drive these networks
 identically (Table VII reproduction runs ResNet18 through this path).
 
+Two parameter forms, mirroring ``models/common.py`` (DESIGN.md §7):
+
+* **train form** (``init_cnn``): ``{"w", "b"}`` per conv/fc layer —
+  ``cnn_forward`` runs fake-quant float math (the QAT / accuracy-proxy
+  path, retained as the fidelity oracle).
+* **serve form** (``quantize_cnn_params``): each weight matrix is
+  quantized ONCE into an int8 container (packed int4 where a serving
+  policy makes it eligible — see ``int4_eligible``), and every GEMM
+  reaches the kernel dispatch layer through ``ops.serve_linear``.
+  Per-layer bits arrive as **traced** ``(n_gemm,)`` vectors — any
+  HAWQ-V3 / fixed / per-layer configuration runs in one compiled
+  program with zero retrace — or as ``(B, n_gemm)`` per-request
+  matrices routed through the bit-grouped batch dispatch.
+
+Grouped convolutions stack per-group containers ``(g, fk, cout/g)`` and
+execute as a single batched GEMM (``ops.serve_linear_stacked``; the
+fake-quant path vmaps the same stack) instead of a per-group Python loop.
+
 Shapes are NHWC; reduced image sizes are fine (examples use CIFAR-sized
 inputs) — layer structure, not ImageNet resolution, is what the paper's
 study needs on CPU.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.apsim.workloads import Layer, NETWORKS
+from repro.apsim.workloads import Layer, NETWORKS, gemm_layers
+from repro.kernels import ops as kops
 from repro.models import common as cm
 
 
@@ -35,24 +54,52 @@ def im2col(x: jnp.ndarray, hk: int, wk: int, stride: int, pad: int
     return jnp.moveaxis(p, 3, 4).reshape(N, Ho, Wo, hk * wk * C)
 
 
+def grouped_cols(cols: jnp.ndarray, g: int, taps: int) -> jnp.ndarray:
+    """(N, Ho, Wo, taps*C) im2col patches -> (N, Ho, Wo, g, taps*(C/g)).
+
+    im2col features are tap-major / channel-minor; group ``i`` owns the
+    channel slice [i*C/g, (i+1)*C/g) of EVERY tap (true grouped-conv
+    semantics — ``jax.lax.conv`` with ``feature_group_count``), so the
+    split must slice the channel axis, not take contiguous feature runs.
+    """
+    N, Ho, Wo, F = cols.shape
+    cg = F // (taps * g)
+    p = cols.reshape(N, Ho, Wo, taps, g, cg)
+    return jnp.moveaxis(p, 4, 3).reshape(N, Ho, Wo, g, taps * cg)
+
+
+def stack_grouped_weight(w: jnp.ndarray, g: int, cout: int) -> jnp.ndarray:
+    """Flat (fk, cout) grouped-conv weight -> (g, fk, cout/g) group stack
+    (group ``i`` produces the contiguous output-channel run [i*cout/g, ...))."""
+    return jnp.moveaxis(w.reshape(w.shape[0], g, cout // g), 1, 0)
+
+
 def conv_gemm(p: dict, x: jnp.ndarray, layer: Layer, wbits=8, abits=8
               ) -> jnp.ndarray:
-    """x: (N, H, W, Cin) -> (N, Ho, Wo, Cout) via patches @ W."""
+    """x: (N, H, W, Cin) -> (N, Ho, Wo, Cout) via patches @ W.
+
+    Dispatches on the parameter form: ``{"w"}`` fake-quant float,
+    ``{"q"/"q4", "s"}`` through the kernel layer.  Grouped convs run one
+    batched GEMM over the (g, fk, cout/g) stack for both forms.
+    """
     g = layer.groups
     cols = im2col(x, layer.hk, layer.wk, layer.stride, layer.pad)
     if g == 1:
         y = cm.apply_linear(p, cols, wbits, abits)
     else:
         N, Ho, Wo, F = cols.shape
-        cin_g = x.shape[-1] // g
-        fk = layer.hk * layer.wk * cin_g
-        cols_g = cols.reshape(N, Ho, Wo, g, fk)
-        w = p["w"].reshape(fk, g, layer.cout // g)
-        ys = [cm.apply_linear({"w": w[:, i]}, cols_g[:, :, :, i], wbits, abits)
-              for i in range(g)]
-        y = jnp.concatenate(ys, axis=-1)
+        xg = jnp.moveaxis(grouped_cols(cols, g, layer.hk * layer.wk), 3, 0)
+        if "w" in p:
+            w3 = stack_grouped_weight(p["w"], g, layer.cout)
+            y = jax.vmap(lambda w, xr: cm.apply_linear({"w": w}, xr,
+                                                       wbits, abits))(w3, xg)
+        else:
+            y = kops.serve_linear_stacked({"q": p["q"], "s": p["s"]}, xg,
+                                          wbits, abits)
+        y = jnp.moveaxis(y, 0, 3).reshape(N, Ho, Wo, layer.cout)
         if "b" in p:
-            y = y + p["b"]
+            y = (y.astype(jnp.float32) + p["b"].astype(jnp.float32))
+        y = y.astype(cm.DTYPE)
     if layer.relu:
         y = jax.nn.relu(y.astype(jnp.float32)).astype(cm.DTYPE)
     return y
@@ -61,9 +108,14 @@ def conv_gemm(p: dict, x: jnp.ndarray, layer: Layer, wbits=8, abits=8
 def pool2d(x: jnp.ndarray, layer: Layer) -> jnp.ndarray:
     k, s = layer.hk, layer.stride
     if layer.kind == "maxpool":
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            init = jnp.iinfo(x.dtype).min        # int8 serve activations
+        else:
+            init = -jnp.inf if x.dtype == jnp.float32 else \
+                jnp.finfo(x.dtype).min
         return jax.lax.reduce_window(
-            x, -jnp.inf if x.dtype == jnp.float32 else jnp.finfo(x.dtype).min,
-            jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+            x, jnp.asarray(init, x.dtype), jax.lax.max,
+            (1, k, k, 1), (1, s, s, 1), "VALID")
     summed = jax.lax.reduce_window(
         x.astype(jnp.float32), 0.0, jax.lax.add, (1, k, k, 1),
         (1, s, s, 1), "VALID")
@@ -76,20 +128,30 @@ def init_cnn(network: str, key, num_classes: int = 1000,
     smaller input image; FC input dims follow the actual spatial size)."""
     layers = NETWORKS[network]()
     if image:
-        scale = image / layers[0].hin
         layers = _rescale(layers, image)
     params: dict = {}
     keys = jax.random.split(key, len(layers))
-    x_hw, x_c = layers[0].hin, layers[0].cin
     for i, l in enumerate(layers):
         if l.kind == "conv":
             fk = l.hk * l.wk * (l.cin // l.groups)
-            # grouped convs store w as (fk, cout) and reshape (fk, g,
-            # cout/g) at apply time; bias is always full (cout,)
+            # grouped convs store w as (fk, cout) and stack to (g, fk,
+            # cout/g) at apply/quantize time; bias is always full (cout,)
             params[l.name] = cm.dense_init(keys[i], fk, l.cout, bias=True)
         elif l.kind == "fc":
             params[l.name] = cm.dense_init(keys[i], l.cin, l.cout, bias=True)
     return params, layers
+
+
+def _shrink_conv_kernel(l: Layer, h: int) -> Tuple[int, int]:
+    """(hk, pad) for a conv squeezed to an ``h``-pixel input: kernels
+    larger than the image shrink, staying ODD so stride-1 same-padded
+    convs keep their spatial size (an even kernel with the original pad
+    GROWS the map — the main path then cannot meet its ``_down``
+    projection at the residual add)."""
+    hk = min(l.hk, h)
+    if hk < l.hk and hk % 2 == 0:
+        hk = max(hk - 1, 1)
+    return hk, min(l.pad, hk // 2)
 
 
 def _rescale(layers: List[Layer], image: int) -> List[Layer]:
@@ -103,16 +165,20 @@ def _rescale(layers: List[Layer], image: int) -> List[Layer]:
     h_block = image
     for l in layers:
         if l.kind == "conv" and l.name.endswith("_down"):
-            hk = min(l.hk, h_block)
-            out.append(dc.replace(l, hin=h_block, win=h_block, hk=hk, wk=hk))
-        elif l.kind in ("conv", "maxpool", "avgpool"):
-            hk = min(l.hk, h)
-            nl = dc.replace(l, hin=h, win=h, hk=hk, wk=hk,
-                            window=hk * hk if l.kind != "conv" else l.window)
+            hk, pad = _shrink_conv_kernel(l, h_block)
+            out.append(dc.replace(l, hin=h_block, win=h_block, hk=hk, wk=hk,
+                                  pad=pad))
+        elif l.kind == "conv":
+            hk, pad = _shrink_conv_kernel(l, h)
+            nl = dc.replace(l, hin=h, win=h, hk=hk, wk=hk, pad=pad)
             h = nl.hout
             out.append(nl)
-            if l.kind != "conv":
-                h_block = h
+        elif l.kind in ("maxpool", "avgpool"):
+            hk = min(l.hk, h)
+            nl = dc.replace(l, hin=h, win=h, hk=hk, wk=hk, window=hk * hk)
+            h = nl.hout
+            out.append(nl)
+            h_block = h
         elif l.kind == "add":
             out.append(dc.replace(l, hin=h, win=h))
             h_block = h
@@ -136,17 +202,108 @@ def _last_channels(layers: List[Layer]) -> int:
     raise ValueError
 
 
+# ---------------------------------------------------------------------------
+# Serve-form parameters
+# ---------------------------------------------------------------------------
+
+def quantize_cnn_params(params: dict, layers: Sequence[Layer], *,
+                        container: str = "int8",
+                        int4_names: Sequence[str] = ()) -> dict:
+    """Train-form CNN params -> serve-form containers, once at init.
+
+    Each conv/fc weight becomes ``{"q" int8 (K, N), "s" (1, N) [, "b"]}``
+    — or ``{"q4" packed uint8 (K, N/2), ...}`` for layers named in
+    ``int4_names`` (see :func:`int4_eligible`).  Grouped convs stack
+    per-group containers ``(g, fk, cout/g)`` with per-group scales
+    (int8 only — their GEMMs run via ``ops.serve_linear_stacked``).
+    """
+    qp: dict = {}
+    for l in gemm_layers(list(layers)):
+        p = params[l.name]
+        if l.kind == "conv" and l.groups > 1:
+            w3 = stack_grouped_weight(p["w"].astype(jnp.float32),
+                                      l.groups, l.cout)
+            q = cm.quantize_linear({"w": w3}, "int8")
+            if "b" in p:
+                q["b"] = p["b"]
+            qp[l.name] = q
+        else:
+            cont = "int4" if l.name in tuple(int4_names) else container
+            qp[l.name] = cm.quantize_linear(p, cont)
+    return qp
+
+
+def int4_eligible(layers: Sequence[Layer], wtab) -> Tuple[str, ...]:
+    """GEMM-layer names a serving policy set makes packed-int4 eligible.
+
+    ``wtab``: (n_configs, n_gemm) stacked weight-bit tables (e.g.
+    ``BudgetController.stacked_tables()[0]``).  A layer may live in an
+    int4 container only if EVERY registered configuration runs it at
+    <= 4 bits (the container is the fidelity ceiling), it is ungrouped,
+    and its output width packs into nibble pairs.
+    """
+    import numpy as np
+    gl = gemm_layers(list(layers))
+    wmax = np.max(np.asarray(wtab, np.int64).reshape(-1, len(gl)), axis=0)
+    return tuple(l.name for i, l in enumerate(gl)
+                 if wmax[i] <= 4 and l.groups == 1 and l.cout % 2 == 0)
+
+
+def _is_serve_form(params: dict, layers: Sequence[Layer]) -> bool:
+    for l in layers:
+        if l.kind in ("conv", "fc"):
+            return "q" in params[l.name] or "q4" in params[l.name]
+    return False
+
+
+def _check_bits(vec, n_gemm: int, which: str):
+    if vec is None:
+        return None
+    v = jnp.asarray(vec)
+    if v.ndim not in (1, 2) or v.shape[-1] != n_gemm:
+        raise ValueError(
+            f"{which} bit vector has shape {tuple(v.shape)} but the network "
+            f"has {n_gemm} GEMM (conv/fc) layers; expand short policy "
+            f"tables first (workloads.per_layer_bits or "
+            f"PrecisionPolicy.vectors({n_gemm})) — silent clamping would "
+            f"misassign per-layer precisions")
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
 def cnn_forward(params: dict, x: jnp.ndarray, layers: List[Layer],
                 wvec=None, avec=None) -> jnp.ndarray:
     """End-to-end inference; wvec/avec: per-GEMM-layer bit arrays (the
-    HAWQ-V3 Table VII vectors) or None for fp."""
+    HAWQ-V3 Table VII vectors) or None for fp.
+
+    Bit vectors must cover the network's GEMM layers exactly:
+    ``(n_gemm,)`` shared across the batch, or ``(B, n_gemm)`` per-request
+    rows (serve form only — routed through the bit-grouped dispatch).
+    With serve-form ``params`` the vectors may be traced arrays: every
+    configuration runs in ONE compiled program (zero retrace); bits clamp
+    to the int8 container width.  ``None`` means fp (fake-quant identity)
+    in train form and container-width execution in serve form.
+    """
+    n_gemm = sum(1 for l in layers if l.kind in ("conv", "fc"))
+    wvec = _check_bits(wvec, n_gemm, "weight")
+    avec = _check_bits(avec, n_gemm, "activation")
+    serve = _is_serve_form(params, layers)
+    if serve:
+        # the container holds at most 8 bit planes; >=16 is the fp
+        # sentinel, which a quantized container cannot honor
+        wvec = jnp.minimum(wvec, 8) if wvec is not None else None
+        avec = jnp.minimum(avec, 8) if avec is not None else None
+    default = 8 if serve else 16
     gi = 0
     residual: Optional[jnp.ndarray] = None
     block_in: Optional[jnp.ndarray] = None
     x = x.astype(cm.DTYPE)
     for l in layers:
-        wb = int(wvec[min(gi, len(wvec) - 1)]) if wvec is not None else 16
-        ab = int(avec[min(gi, len(avec) - 1)]) if avec is not None else 16
+        wb = wvec[..., gi] if wvec is not None else default
+        ab = avec[..., gi] if avec is not None else default
         if l.kind == "conv":
             if block_in is None:
                 block_in = x
@@ -158,10 +315,20 @@ def cnn_forward(params: dict, x: jnp.ndarray, layers: List[Layer],
             gi += 1
         elif l.kind in ("maxpool", "avgpool"):
             x = pool2d(x, l)
+            # a pool ends the residual block: the next conv starts a new
+            # block from the POOLED map (a stale block_in would hand the
+            # first residual add a pre-pool skip of the wrong shape)
+            block_in = None
         elif l.kind == "add":
             skip = residual if residual is not None else block_in
-            if skip is not None and skip.shape == x.shape:
-                x = x + skip
+            if skip is None or skip.shape != x.shape:
+                raise ValueError(
+                    f"residual add {l.name!r}: main path {tuple(x.shape)} "
+                    f"vs skip "
+                    f"{None if skip is None else tuple(skip.shape)} — "
+                    f"block wiring is broken (missing/inconsistent "
+                    f"downsample projection)")
+            x = x + skip
             x = jax.nn.relu(x.astype(jnp.float32)).astype(cm.DTYPE)
             residual, block_in = None, None
         elif l.kind == "fc":

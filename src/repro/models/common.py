@@ -37,16 +37,20 @@ def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
 
 
 def quantize_linear(p: dict, container: str = "int8") -> dict:
-    """Training-form linear -> serving-form (int8 or packed-int4 container)."""
+    """Training-form linear -> serving-form (int8 or packed-int4 container).
+
+    ``w`` may be ``(K, N)`` or a stack ``(G, K, N)`` (grouped-conv /
+    expert stacks): scales are per-out-channel along the reduction axis
+    (``axis=-2``), so every stacked slice quantizes independently."""
     w = p["w"].astype(jnp.float32)
     out = {}
     if container == "int4":
-        s = bf.symmetric_scale(w, 4, axis=0)
+        s = bf.symmetric_scale(w, 4, axis=-2)
         q = bf.quantize(w, s, 4)
         out["q4"] = bf.pack_int4_halves(q)
         out["s"] = s
     else:
-        s = bf.symmetric_scale(w, 8, axis=0)
+        s = bf.symmetric_scale(w, 8, axis=-2)
         out["q"] = bf.quantize(w, s, 8)
         out["s"] = s
     if "b" in p:

@@ -64,21 +64,21 @@ def _expert_ffn(pe, xin, wbits, abits):
         h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
              ).astype(cm.DTYPE)
         return jax.vmap(per_expert, in_axes=(0, 0, 0))(pe["wd"], h, wb)
-    # serve form: {"q": (E,d,f) int8, "s": (E,1,f)} — per-expert weights
-    # differ, so the per-expert requant is NOT redundant (unlike per-row
-    # bits over shared weights); each expert's GEMM reaches the kernel
-    # layer through ops.serve_linear under vmap.
-    wb = jnp.broadcast_to(jnp.asarray(wbits), (pe["wg"]["q"].shape[0],))
+    # serve form: {"q": (E,d,f) int8, "s": (E,1,f)} — expert stacks run as
+    # one batched GEMM through the kernel layer, expert e at wbits[e]
+    # (ops.serve_linear_stacked with stack_bits: per-expert weights
+    # differ, so the per-expert requant is NOT redundant, unlike per-row
+    # bits over shared weights).
+    def stacked(pq, x):
+        return kops.serve_linear_stacked(
+            {"q": pq["q"], "s": pq["s"]}, x, wbits, abits,
+            stack_bits=True).astype(cm.DTYPE)
 
-    def per_expert_q(q, s, x, b):
-        return kops.serve_linear({"q": q, "s": s}, x, b, abits
-                                 ).astype(cm.DTYPE)
-
-    g = jax.vmap(per_expert_q, (0, 0, 0, 0))(pe["wg"]["q"], pe["wg"]["s"], xin, wb)
-    u = jax.vmap(per_expert_q, (0, 0, 0, 0))(pe["wu"]["q"], pe["wu"]["s"], xin, wb)
+    g = stacked(pe["wg"], xin)
+    u = stacked(pe["wu"], xin)
     h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
          ).astype(cm.DTYPE)
-    return jax.vmap(per_expert_q, (0, 0, 0, 0))(pe["wd"]["q"], pe["wd"]["s"], h, wb)
+    return stacked(pe["wd"], h)
 
 
 def _route(p, xf, cfg):

@@ -1,1 +1,2 @@
+from repro.serve.cnn import CNNServeEngine  # noqa: F401
 from repro.serve.engine import ServeEngine  # noqa: F401

@@ -1,0 +1,219 @@
+"""Batched CNN image serving with per-request bit fluidity + EDP pricing.
+
+The CNN analogue of :class:`repro.serve.engine.ServeEngine` (DESIGN.md
+§7): weights are quantized/prepacked ONCE at engine construction
+(``cnn.quantize_cnn_params`` — int8 containers, packed int4 where the
+controller's configurations make a layer eligible), and ONE compiled
+forward serves every batch: each image's latency/EDP budget resolves
+through a :class:`repro.core.policy.BudgetController` into a per-layer
+bit vector, the batch's ``(B, n_gemm)`` bit *matrix* is an ordinary
+traced input executed via the bit-grouped batch dispatch
+(``kernels/ops.py``), and each image's resolved vector is priced through
+the paper's calibrated AP cost model (``apsim.metrics.price_bit_vector``
+over the network's conv/fc GEMM dims) — so per-request AP
+latency/energy/EDP come back with the logits (Table VII, live per
+image).
+
+Batches pad to a fixed ``max_batch`` so batch-size churn never retraces;
+``CNNServeStats.forward_traces`` proves the zero-retrace property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apsim import metrics as apm
+from repro.apsim.workloads import Layer, gemm_layers
+from repro.core.policy import BudgetController, PrecisionPolicy, fixed
+from repro.kernels import ops as kops
+from repro.models import cnn
+
+
+@dataclasses.dataclass
+class CNNServeStats:
+    """Engine-wide counters; ``forward_traces`` proves zero-retrace."""
+    forward_traces: int = 0
+    batches: int = 0
+    images: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageStats:
+    """Per-image serving record: the request's resolved precision and its
+    modeled AP cost for ONE inference at that precision (per-layer
+    breakdown on ``ap_cost``)."""
+    index: int
+    budget: float
+    wbits: Tuple[int, ...]
+    abits: Tuple[int, ...]
+    ap_cost: apm.BitVectorCost
+
+    @property
+    def mean_wbits(self) -> float:
+        return sum(self.wbits) / len(self.wbits)
+
+    @property
+    def ap_latency_s(self) -> float:
+        return self.ap_cost.latency_s
+
+    @property
+    def ap_energy_j(self) -> float:
+        return self.ap_cost.energy_j
+
+    @property
+    def edp(self) -> float:
+        """Modeled AP energy-delay product (J*s) of this inference."""
+        return self.ap_cost.edp
+
+
+class CNNServeEngine:
+    """Batched, bit-fluid CNN inference server.
+
+    ``serve(images, budgets)`` runs one batch: ``images`` (B, H, W, C)
+    with B <= ``max_batch`` (short batches right-pad; padded rows take
+    the cheapest configuration and are dropped from the results), and
+    ``budgets`` a scalar or ``(B,)`` per-image vector on the
+    controller's budget axis (EDP by default — see
+    ``policy.cnn_budget_controller``; ``None`` = unconstrained = most
+    accurate configuration).  Returns ``(logits (B, num_classes),
+    [ImageStats])``.
+    """
+
+    def __init__(self, params: dict, layers: Sequence[Layer], *,
+                 controller: Optional[BudgetController] = None,
+                 policy: Optional[PrecisionPolicy] = None,
+                 max_batch: int = 8, container: str = "auto"):
+        self.layers = list(layers)
+        gl = gemm_layers(self.layers)
+        self.n_gemm = len(gl)
+        if controller is None:
+            pol = policy or fixed(8)
+            controller = BudgetController({pol.name: pol}, {pol.name: 0.0},
+                                          self.n_gemm)
+        if controller.n_layers != self.n_gemm:
+            raise ValueError(
+                f"controller resolves {controller.n_layers} bit slots but "
+                f"the network has {self.n_gemm} GEMM (conv/fc) layers")
+        self.controller = controller
+        self.max_batch = max_batch
+        wtab, _ = controller.stacked_tables()
+        # grouped per-row dispatch specializes one GEMM per distinct
+        # weight bit-width the controller can emit (kernels/ops.py)
+        self._families = tuple(sorted(
+            {min(max(int(v), 1), 8) for v in np.asarray(wtab).ravel()}))
+        if container == "auto":
+            int4_names = cnn.int4_eligible(self.layers, wtab)
+            container = "int8"
+        else:
+            int4_names = ()
+            wmax = int(np.max(np.asarray(wtab)))
+            if container == "int4" and wmax > 4:
+                raise ValueError(
+                    f"container='int4' caps fidelity at 4 bits but the "
+                    f"controller can resolve up to {wmax}-bit "
+                    f"configurations — requests would be priced at a "
+                    f"precision the container cannot honor (use "
+                    f"container='auto' to pack int4 only where every "
+                    f"configuration stays <= 4 bits)")
+        self.int4_names = int4_names
+        self.qparams = cnn.quantize_cnn_params(params, self.layers,
+                                               container=container,
+                                               int4_names=int4_names)
+        self._gemms = apm.network_gemms(self.layers)
+        self._price_cache: Dict[bytes, apm.BitVectorCost] = {}
+        self.stats = CNNServeStats()
+
+        def _fwd(qp, x, wmat, amat):
+            self.stats.forward_traces += 1
+            return cnn.cnn_forward(qp, x, self.layers, wmat, amat)
+
+        self._fwd = jax.jit(_fwd)
+
+    def price_bits(self, wv, av) -> apm.BitVectorCost:
+        """AP cycles/energy of one resolved (n_gemm,) bit vector pair
+        over the network's conv/fc GEMMs (cached — controllers emit a
+        small static set of vectors)."""
+        wv = np.asarray(wv, np.int64)
+        av = np.asarray(av, np.int64)
+        key = wv.tobytes() + b"|" + av.tobytes()
+        hit = self._price_cache.get(key)
+        if hit is None:
+            hit = apm.price_bit_vector(self._gemms, wv.tolist(), av.tolist())
+            self._price_cache[key] = hit
+        return hit
+
+    def serve(self, images, budgets=None
+              ) -> Tuple[np.ndarray, List[ImageStats]]:
+        """One batched inference; see class docstring."""
+        images = jnp.asarray(images)
+        B = images.shape[0]
+        if not 1 <= B <= self.max_batch:
+            raise ValueError(f"batch of {B} images exceeds max_batch="
+                             f"{self.max_batch}")
+        if budgets is None:
+            bud = np.full((B,), 1e30, np.float64)      # unconstrained
+        else:
+            bud = np.broadcast_to(np.asarray(budgets, np.float64),
+                                  (B,)).copy()
+        # pad to the fixed batch shape: padded rows take the cheapest
+        # configuration (budget 0 fits nothing -> fastest) and are dropped
+        pad = self.max_batch - B
+        if pad:
+            images = jnp.pad(images, ((0, pad),) + ((0, 0),) * 3)
+            bud = np.concatenate([bud, np.zeros((pad,), np.float64)])
+        wmat, amat = self.controller.resolve(jnp.asarray(bud, jnp.float32))
+        with kops.bit_families(self._families):
+            logits = self._fwd(self.qparams, images, wmat, amat)
+        wmat_h = np.asarray(wmat, np.int64)
+        amat_h = np.asarray(amat, np.int64)
+        stats = [
+            ImageStats(index=i, budget=float(bud[i]),
+                       wbits=tuple(int(b) for b in wmat_h[i]),
+                       abits=tuple(int(b) for b in amat_h[i]),
+                       ap_cost=self.price_bits(wmat_h[i], amat_h[i]))
+            for i in range(B)
+        ]
+        self.stats.batches += 1
+        self.stats.images += B
+        return np.asarray(logits[:B]), stats
+
+
+def hawq_fidelity_sweep(network: str = "resnet18", image: int = 32,
+                        batch: int = 2, seed: int = 0
+                        ) -> Tuple[Dict[str, float], int]:
+    """Run every ``HAWQV3_RESNET18`` configuration through the serve-form
+    kernels in ONE compiled program; returns ``({constraint:
+    fidelity-vs-fp}, n_traces)``.
+
+    Fidelity is softmax total-variation agreement with the fp
+    (fake-quant-identity) reference — the functional accuracy axis of
+    the Table VII accuracy-vs-EDP reproduction.  ``n_traces`` counts
+    compiles across all five configuration switches; 1 is the
+    zero-retrace claim (``benchmarks/table7_bitfluid.py`` gates on it,
+    ``examples/mixed_precision_resnet18.py`` prints it).
+    """
+    from repro.apsim.workloads import HAWQV3_RESNET18, per_layer_bits
+
+    key = jax.random.PRNGKey(seed)
+    params, layers = cnn.init_cnn(network, key, image=image)
+    qp = cnn.quantize_cnn_params(params, layers)
+    x = jax.random.normal(key, (batch, image, image, 3), jnp.float32)
+    ref = jax.nn.softmax(cnn.cnn_forward(params, x, layers), axis=-1)
+    traces: List[int] = []
+
+    def fwd(wv):
+        traces.append(1)
+        return cnn.cnn_forward(qp, x, layers, wv, wv)
+
+    jfwd = jax.jit(fwd)
+    fid = {}
+    for name, vec in HAWQV3_RESNET18.items():
+        bits = jnp.asarray(per_layer_bits(layers, vec), jnp.int32)
+        out = jax.nn.softmax(jfwd(bits), axis=-1)
+        fid[name] = float(1.0 - 0.5 * jnp.abs(out - ref).sum(-1).mean())
+    assert all(np.isfinite(v) for v in fid.values())
+    return fid, len(traces)

@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.apsim.workloads import add, conv, fc, pool
 from repro.models import cnn
+from repro.models import common as cm
 
 KEY = jax.random.PRNGKey(0)
 
@@ -46,3 +48,70 @@ def test_cnn_bits_change_output_monotonically():
         out = cnn.cnn_forward(params, x, layers, wv, wv)
         errs.append(float(jnp.abs(out - ref).mean()))
     assert errs[0] > errs[1] > errs[2]
+
+
+def test_grouped_conv_matches_lax_conv():
+    """conv_gemm with groups > 1 implements TRUE grouped-conv semantics
+    (channel-sliced groups == lax.conv with feature_group_count)."""
+    l = conv("g", 8, 8, 3, 12, groups=4, relu=False)
+    rng = np.random.default_rng(0)
+    fk = l.hk * l.wk * (l.cin // l.groups)
+    w = jnp.asarray(rng.normal(size=(fk, l.cout)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.normal(size=(l.cout,)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 8)).astype(np.float32))
+    got = cnn.conv_gemm({"w": w.astype(cm.DTYPE), "b": b.astype(cm.DTYPE)},
+                        x, l, 16, 16)
+    w_hwio = w.reshape(l.hk, l.wk, l.cin // l.groups, l.cout)
+    ref = jax.lax.conv_general_dilated(
+        x, w_hwio, (1, 1), [(1, 1), (1, 1)], feature_group_count=l.groups,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref),
+                               rtol=0.1, atol=0.1)        # bf16 GEMM
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32])
+def test_pool2d_integer_dtypes(dtype):
+    """Serve-form int activations: maxpool must use iinfo, not finfo."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (2, 8, 8, 4)), dtype)
+    mp = pool("p", "maxpool", 8, 4, 2, 2)
+    got = cnn.pool2d(x, mp)
+    want = cnn.pool2d(x.astype(jnp.float32), mp)
+    assert got.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  np.asarray(want, np.int64))
+    ap = pool("p", "avgpool", 8, 4, 2, 2)
+    assert cnn.pool2d(x, ap).dtype == dtype               # no crash
+
+
+def test_residual_shape_mismatch_raises():
+    """A broken block (no downsample projection across a stride-2 conv)
+    must raise with the offending layer/shapes, not silently skip."""
+    layers = [
+        conv("c1", 8, 4, 3, 8),
+        conv("c2", 8, 8, 3, 8, stride=2),
+        add("a1", 4, 8),
+        fc("fc", 8 * 4 * 4, 10, relu=False),
+    ]
+    params = {}
+    keys = jax.random.split(KEY, len(layers))
+    for i, l in enumerate(layers):
+        if l.kind in ("conv", "fc"):
+            k = l.hk * l.wk * l.cin if l.kind == "conv" else l.cin
+            params[l.name] = cm.dense_init(keys[i], k, l.cout, bias=True)
+    x = jax.random.normal(KEY, (2, 8, 8, 4), jnp.float32)
+    with pytest.raises(ValueError, match="a1"):
+        cnn.cnn_forward(params, x, layers)
+
+
+def test_rescaled_resnets_keep_block_wiring():
+    """_rescale must keep every residual add shape-consistent (shrunken
+    kernels stay odd; pools end blocks) — the add path now raises on any
+    wiring break, so a clean forward IS the assertion."""
+    for net in ("resnet18", "resnet50"):
+        for image in (24, 32):
+            params, layers = cnn.init_cnn(net, KEY, image=image)
+            x = jax.random.normal(KEY, (1, image, image, 3), jnp.float32)
+            out = cnn.cnn_forward(params, x, layers)
+            assert out.shape == (1, 1000)
+            assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,405 @@
+"""Serve-form CNN dispatch: conv-as-GEMM through kernels/ops.py must be
+BIT-EXACT against the retained inline serve math (the fake-quant-era
+per-layer/per-group-loop oracle below, held verbatim in the
+test_kernel_dispatch.py style), run every HAWQ-V3 configuration in ONE
+compiled program (zero retrace), and the batched serving engine must
+return per-request EDP priced over the network's conv/fc GEMM dims."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.apsim import metrics as apm
+from repro.apsim.workloads import (HAWQV3_RESNET18, conv, fc, gemm_layers,
+                                   per_layer_bits, pool, add)
+from repro.core import bitfluid as bf
+from repro.core import policy as pol
+from repro.kernels import ops
+from repro.models import cnn
+from repro.models import common as cm
+from repro.serve.cnn import CNNServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+# full-network forwards are too slow through interpret-mode Pallas; the
+# dispatch numerics are covered by the tiny-net tests, which do run there
+INTERP = os.environ.get("REPRO_PALLAS", "").lower() == "interpret"
+heavy = pytest.mark.skipif(INTERP, reason="tiny-net tests cover dispatch "
+                                          "under interpret-mode Pallas")
+
+
+def _tiny_layers():
+    """conv -> maxpool -> grouped conv -> residual add -> fc (3 GEMMs)."""
+    return [
+        conv("c1", 8, 4, 3, 8),
+        pool("p1", "maxpool", 8, 8, 2, 2),
+        conv("c2", 4, 8, 3, 8, groups=2),
+        add("a1", 4, 8),
+        fc("fc", 8 * 4 * 4, 10, relu=False),
+    ]
+
+
+def _tiny(int4_names=()):
+    layers = _tiny_layers()
+    params = {}
+    keys = jax.random.split(KEY, len(layers))
+    for i, l in enumerate(layers):
+        if l.kind == "conv":
+            fk = l.hk * l.wk * (l.cin // l.groups)
+            params[l.name] = cm.dense_init(keys[i], fk, l.cout, bias=True)
+        elif l.kind == "fc":
+            params[l.name] = cm.dense_init(keys[i], l.cin, l.cout, bias=True)
+    qp = cnn.quantize_cnn_params(params, layers, int4_names=int4_names)
+    return params, qp, layers
+
+
+def _f32(x):
+    return np.asarray(x, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Oracle: the inline serve math, verbatim (per-group Python loop form).
+# ---------------------------------------------------------------------------
+
+def _oracle_linear(p, x, wbits, abits):
+    if "q4" in p:
+        qw, from_bits = bf.unpack_int4_halves(p["q4"]), 4
+    else:
+        qw, from_bits = p["q"], 8
+    w_q = bf.requant_shift(qw, wbits, from_bits=from_bits)
+    w_s = bf.effective_scale(p["s"], wbits, from_bits=from_bits)
+    x2 = x.astype(jnp.float32)
+    x_scale = bf.symmetric_scale(x2, abits)
+    x_q = bf.quantize(x2, x_scale, abits)
+    acc = jax.lax.dot_general(
+        x_q, w_q, dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * x_scale * w_s
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(cm.DTYPE)
+
+
+def _oracle_conv(p, x, layer, wbits, abits):
+    g = layer.groups
+    cols = cnn.im2col(x, layer.hk, layer.wk, layer.stride, layer.pad)
+    if g == 1:
+        y = _oracle_linear(p, cols, wbits, abits)
+    else:
+        N, Ho, Wo, _ = cols.shape
+        cg = cnn.grouped_cols(cols, g, layer.hk * layer.wk)
+        ys = [_oracle_linear({"q": p["q"][i], "s": p["s"][i]},
+                             cg[:, :, :, i], wbits, abits)
+              for i in range(g)]
+        y = jnp.concatenate(ys, axis=-1)
+        if "b" in p:
+            y = y.astype(jnp.float32) + p["b"].astype(jnp.float32)
+        y = y.astype(cm.DTYPE)
+    if layer.relu:
+        y = jax.nn.relu(y.astype(jnp.float32)).astype(cm.DTYPE)
+    return y
+
+
+def _oracle_forward(qp, x, layers, wvec, avec):
+    gi = 0
+    residual = block_in = None
+    x = x.astype(cm.DTYPE)
+    for l in layers:
+        wb = int(wvec[gi]) if wvec is not None else 8
+        ab = int(avec[gi]) if avec is not None else 8
+        if l.kind == "conv":
+            if block_in is None:
+                block_in = x
+            if l.name.endswith("_down"):
+                residual = _oracle_conv(qp[l.name], block_in, l, wb, ab)
+                gi += 1
+                continue
+            x = _oracle_conv(qp[l.name], x, l, wb, ab)
+            gi += 1
+        elif l.kind in ("maxpool", "avgpool"):
+            x = cnn.pool2d(x, l)
+            block_in = None
+        elif l.kind == "add":
+            skip = residual if residual is not None else block_in
+            x = x + skip
+            x = jax.nn.relu(x.astype(jnp.float32)).astype(cm.DTYPE)
+            residual, block_in = None, None
+        elif l.kind == "fc":
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = _oracle_linear(qp[l.name], x, wb, ab)
+            if l.relu:
+                x = jax.nn.relu(x.astype(jnp.float32)).astype(cm.DTYPE)
+            gi += 1
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch parity (runs under interpret-mode Pallas too)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("int4_names", [(), ("c1", "fc")],
+                         ids=["int8", "int4-mixed"])
+@pytest.mark.parametrize("wbits", [2, 4, 8])
+def test_serve_forward_bit_exact_vs_oracle(rng, int4_names, wbits):
+    _, qp, layers = _tiny(int4_names)
+    n = len(gemm_layers(layers))
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32))
+    wv = jnp.full((n,), wbits, jnp.int32)
+    got = cnn.cnn_forward(qp, x, layers, wv, wv)
+    want = _oracle_forward(qp, x, layers, [wbits] * n, [wbits] * n)
+    np.testing.assert_array_equal(_f32(got), _f32(want))
+
+
+def test_grouped_single_gemm_matches_per_group_loop(rng):
+    _, qp, layers = _tiny()
+    l = layers[2]
+    assert l.groups == 2
+    x = jnp.asarray(rng.normal(size=(2, l.hin, l.hin, l.cin))
+                    .astype(np.float32)).astype(cm.DTYPE)
+    for wb in (2, 4, 8):
+        got = cnn.conv_gemm(qp[l.name], x, l, wb, 8)
+        want = _oracle_conv(qp[l.name], x, l, wb, 8)
+        np.testing.assert_array_equal(_f32(got), _f32(want))
+
+
+def test_serve_linear_stacked_matches_loop(rng):
+    w = jnp.asarray(rng.normal(size=(3, 32, 16)).astype(np.float32) * 0.1)
+    qs = cm.quantize_linear({"w": w})
+    x = jnp.asarray(rng.normal(size=(3, 5, 32)).astype(np.float32))
+    got = ops.serve_linear_stacked({"q": qs["q"], "s": qs["s"]}, x, 4, 8)
+    want = jnp.stack([
+        ops.serve_linear({"q": qs["q"][i], "s": qs["s"][i]}, x[i], 4, 8)
+        for i in range(3)])
+    np.testing.assert_array_equal(_f32(got), _f32(want))
+    # stack_bits: one width per stacked slice (the MoE per-expert axis)
+    wb = jnp.asarray([2, 4, 8], jnp.int32)
+    got = ops.serve_linear_stacked({"q": qs["q"], "s": qs["s"]}, x, wb, 8,
+                                   stack_bits=True)
+    want = jnp.stack([
+        ops.serve_linear({"q": qs["q"][i], "s": qs["s"][i]}, x[i],
+                         int(wb[i]), 8)
+        for i in range(3)])
+    np.testing.assert_array_equal(_f32(got), _f32(want))
+
+
+def test_per_row_bit_matrix_rows_match_solo_runs(rng):
+    """(B, n_gemm) per-request rows are numerically independent: each row
+    equals its own single-image run at that row's (n_gemm,) vector."""
+    _, qp, layers = _tiny()
+    n = len(gemm_layers(layers))
+    x = jnp.asarray(rng.normal(size=(3, 8, 8, 4)).astype(np.float32))
+    rows = jnp.asarray([[4] * n, [8] * n, [4, 8, 4]], jnp.int32)
+    with ops.bit_families((4, 8)):
+        batched = _f32(cnn.cnn_forward(qp, x, layers, rows, rows))
+        for i in range(3):
+            solo = _f32(cnn.cnn_forward(qp, x[i:i + 1], layers,
+                                        rows[i], rows[i]))
+            np.testing.assert_array_equal(batched[i:i + 1], solo)
+
+
+def test_zero_retrace_across_bit_configs(rng):
+    """Any per-layer configuration is data: one trace serves them all."""
+    _, qp, layers = _tiny()
+    n = len(gemm_layers(layers))
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32))
+    traces = []
+
+    @jax.jit
+    def run(wv, av):
+        traces.append(1)
+        return cnn.cnn_forward(qp, x, layers, wv, av)
+
+    for mix in ([8] * n, [4] * n, [2, 4, 8], [8, 2, 4]):
+        run(jnp.asarray(mix, jnp.int32),
+            jnp.asarray(mix, jnp.int32)).block_until_ready()
+    assert len(traces) == 1
+
+
+# ---------------------------------------------------------------------------
+# ResNet18 / HAWQ-V3 (the Table VII acceptance path)
+# ---------------------------------------------------------------------------
+
+@heavy
+def test_hawq_resnet18_one_compiled_program(rng):
+    """All HAWQV3_RESNET18 constraints run ResNet18 through
+    ops.serve_linear in ONE compiled program, bit-exact to the retained
+    inline oracle."""
+    params, layers = cnn.init_cnn("resnet18", KEY, image=32)
+    qp = cnn.quantize_cnn_params(params, layers)
+    n = len(gemm_layers(layers))
+    x = jnp.asarray(rng.normal(size=(2, 32, 32, 3)).astype(np.float32))
+    traces = []
+
+    @jax.jit
+    def run(wv, av):
+        traces.append(1)
+        return cnn.cnn_forward(qp, x, layers, wv, av)
+
+    outs = {}
+    for name, vec in HAWQV3_RESNET18.items():
+        bits = jnp.asarray(per_layer_bits(layers, vec), jnp.int32)
+        outs[name] = np.asarray(run(bits, bits))
+    assert len(traces) == 1
+    assert not np.allclose(outs["int4"], outs["int8"])
+    bits = per_layer_bits(layers, HAWQV3_RESNET18["medium"])
+    want = _oracle_forward(qp, x, layers, bits, bits)
+    np.testing.assert_array_equal(outs["medium"], _f32(want))
+
+
+@heavy
+def test_engine_per_request_edp_monotone(rng):
+    """Mixed budgets in one batch: tighter budgets resolve to fewer bits
+    and strictly lower modeled EDP; batch churn never retraces."""
+    params, layers = cnn.init_cnn("resnet18", KEY, image=32)
+    ctrl = pol.cnn_budget_controller("resnet18", layers=layers)
+    eng = CNNServeEngine(params, layers, controller=ctrl, max_batch=4)
+    preds = sorted(ctrl.predicted_latency_s.values())
+    lo, hi = preds[0] * 1.01, preds[-1] * 1.01
+    x = jnp.asarray(rng.normal(size=(4, 32, 32, 3)).astype(np.float32))
+    logits, stats = eng.serve(x, [lo, hi, lo, hi])
+    assert logits.shape == (4, 1000)
+    assert np.isfinite(logits).all()
+    assert stats[0].mean_wbits < stats[1].mean_wbits
+    assert stats[0].edp < stats[1].edp                  # int4 < int8 rows
+    assert stats[0].ap_energy_j < stats[1].ap_energy_j
+    assert stats[2].edp == stats[0].edp                 # same config, cached
+    # shorter batch, different mix: same compiled program
+    logits2, stats2 = eng.serve(x[:2], hi)
+    assert logits2.shape == (2, 1000)
+    assert stats2[0].edp == stats[1].edp
+    assert eng.stats.forward_traces == 1
+    assert eng.stats.images == 6
+
+
+def test_engine_int4_container_plan(rng):
+    """A controller whose every configuration runs <= 4 bits makes
+    ungrouped, even-width layers packed-int4 eligible; grouped layers
+    stay int8 stacks."""
+    params, _, layers = _tiny()
+    ctrl = pol.BudgetController(
+        {"int4": pol.fixed(4), "int2": pol.fixed(2)},
+        {"int4": 2.0, "int2": 1.0}, len(gemm_layers(layers)))
+    eng = CNNServeEngine(params, layers, controller=ctrl, max_batch=2)
+    assert set(eng.int4_names) == {"c1", "fc"}          # c2 is grouped
+    assert "q4" in eng.qparams["c1"] and "q4" in eng.qparams["fc"]
+    assert "q" in eng.qparams["c2"] and eng.qparams["c2"]["q"].ndim == 3
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32))
+    logits, stats = eng.serve(x, [0.5, 3.0])
+    assert np.isfinite(logits).all()
+    assert stats[0].mean_wbits == 2 and stats[1].mean_wbits == 4
+    # with an 8-bit config registered, nothing is int4-eligible
+    ctrl8 = pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 1.0, "int8": 2.0}, len(gemm_layers(layers)))
+    assert CNNServeEngine(params, layers, controller=ctrl8).int4_names == ()
+
+
+def test_engine_validates_controller_slots():
+    params, _, layers = _tiny()
+    ctrl = pol.BudgetController({"int8": pol.fixed(8)}, {"int8": 0.0}, 7)
+    with pytest.raises(ValueError, match="GEMM"):
+        CNNServeEngine(params, layers, controller=ctrl)
+
+
+def test_engine_rejects_oversized_batch(rng):
+    params, _, layers = _tiny()
+    eng = CNNServeEngine(params, layers, max_batch=2)
+    x = jnp.asarray(rng.normal(size=(3, 8, 8, 4)).astype(np.float32))
+    with pytest.raises(ValueError, match="max_batch"):
+        eng.serve(x)
+
+
+# ---------------------------------------------------------------------------
+# EDP pricing over conv/fc GEMM dims
+# ---------------------------------------------------------------------------
+
+def test_price_bit_vector_layers_match_simulator():
+    """Pricing a CNN bit vector over network_gemms must equal the GEMM
+    subtotal of the paper simulator on the same bits (same _gemm_layer
+    mapping), and scale monotonically with precision."""
+    from repro.apsim.energy import SRAM
+    from repro.apsim.mapper import LR_CONFIG, simulate_network
+
+    layers = _tiny_layers()
+    gemms = apm.network_gemms(layers)
+    n = len(gemms)
+    c4 = apm.price_bit_vector(gemms, [4] * n, [4] * n)
+    c8 = apm.price_bit_vector(gemms, [8] * n, [8] * n)
+    assert 0 < c4.energy_j < c8.energy_j
+    assert 0 < c4.edp < c8.edp
+    rep = simulate_network(layers, LR_CONFIG, SRAM, bits=8)
+    want_cyc = sum(r.cycles for r in rep.layers if r.kind in ("conv", "fc"))
+    want_en = sum(r.energy_j for r in rep.layers if r.kind in ("conv", "fc"))
+    np.testing.assert_allclose(c8.cycles, want_cyc, rtol=1e-12)
+    np.testing.assert_allclose(c8.energy_j, want_en, rtol=1e-12)
+
+
+def test_cnn_budget_controller_resolves_by_edp():
+    ctrl = pol.cnn_budget_controller("resnet18")
+    assert ctrl.budget_axis == "edp"
+    assert ctrl.order() == ["hawqv3-int4", "hawqv3-low", "hawqv3-medium",
+                            "hawqv3-high", "hawqv3-int8"]
+    preds = [ctrl.predicted_latency_s[k] for k in ctrl.order()]
+    assert preds == sorted(preds)
+    wv, _ = ctrl.resolve(jnp.asarray(preds[0] * 1.01, jnp.float32))
+    assert float(jnp.mean(wv.astype(jnp.float32))) == 4.0
+    wv, _ = ctrl.resolve(jnp.asarray(preds[-1] * 1.01, jnp.float32))
+    assert float(jnp.mean(wv.astype(jnp.float32))) == 8.0
+    with pytest.raises(ValueError, match="metric"):
+        pol.cnn_budget_controller("resnet18", metric="flops")
+
+
+def test_cnn_budget_controller_other_networks():
+    """The HAWQ-V3 defaults are ResNet18 vectors: on AlexNet they must
+    raise with a clear error, and explicit per-network configs work."""
+    with pytest.raises(ValueError, match="explicit"):
+        pol.cnn_budget_controller("alexnet")
+    ctrl = pol.cnn_budget_controller(
+        "alexnet",
+        configs={"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        metric="energy")
+    assert ctrl.budget_axis == "energy"
+    assert ctrl.n_layers == 8
+    assert (ctrl.predicted_latency_s["int4"]
+            < ctrl.predicted_latency_s["int8"])
+
+
+def test_engine_rejects_unhonorable_int4_container():
+    """An explicit int4 container under a controller that can resolve
+    8-bit configs would bill requests at a precision the container
+    cannot honor — the engine must refuse it."""
+    params, _, layers = _tiny()
+    ctrl = pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 1.0, "int8": 2.0}, len(gemm_layers(layers)))
+    with pytest.raises(ValueError, match="cannot honor"):
+        CNNServeEngine(params, layers, controller=ctrl, container="int4")
+
+
+# ---------------------------------------------------------------------------
+# Bit-vector validation (no silent clamping)
+# ---------------------------------------------------------------------------
+
+def test_bit_vector_length_validated(rng):
+    params, layers = cnn.init_cnn("resnet18", KEY, image=32)
+    x = jnp.asarray(rng.normal(size=(1, 32, 32, 3)).astype(np.float32))
+    short = jnp.asarray(HAWQV3_RESNET18["medium"], jnp.int32)   # 18 < 21
+    with pytest.raises(ValueError, match="21 GEMM"):
+        cnn.cnn_forward(params, x, layers, short, short)
+    n = len(gemm_layers(layers))
+    good = jnp.full((n,), 8, jnp.int32)
+    with pytest.raises(ValueError, match="21 GEMM"):
+        cnn.cnn_forward(params, x, layers, good, good[:-1])
+    bad_rows = jnp.full((2, n + 1), 8, jnp.int32)
+    with pytest.raises(ValueError, match="21 GEMM"):
+        cnn.cnn_forward(params, x, layers, bad_rows, bad_rows)
+
+
+def test_per_layer_bits_rejects_overlong():
+    layers = _tiny_layers()
+    assert per_layer_bits(layers, [8]) == [8, 8, 8]
+    with pytest.raises(ValueError, match="exceeds"):
+        per_layer_bits(layers, [8, 8, 8, 8])
