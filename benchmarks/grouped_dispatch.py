@@ -23,23 +23,25 @@ import jax.numpy as jnp
 import numpy as np
 
 BATCHES = (8, 32)
+SMOKE_BATCHES = (32,)       # the gated claim lives at B=32
 STEPS = 12
+SMOKE_STEPS = 8
 PROMPT = 8
 REPS = 3
 LAST_RESULTS: dict = {}
 
 
-def _bench(eng, batch, steps):
+def _bench(eng, batch, steps, reps=REPS):
     np.asarray(eng.generate(batch, steps))            # warm the traces
     best = float("inf")
-    for _ in range(REPS):                             # best-of-N: CI hosts
+    for _ in range(reps):                             # best-of-N: CI hosts
         t0 = time.perf_counter()                      # are noisy neighbors
         np.asarray(eng.generate(batch, steps))
         best = min(best, time.perf_counter() - t0)
     return batch["tokens"].shape[0] * steps / best
 
 
-def main() -> int:
+def main(full: bool = True) -> int:
     from repro import configs
     from repro.core import policy as pol
     from repro.kernels import ops
@@ -63,18 +65,21 @@ def main() -> int:
         {"int4": pol.fixed(4), "int8": pol.fixed(8)},
         {"int4": 1.0, "int8": 2.0}, n)
 
+    batches = BATCHES if full else SMOKE_BATCHES
+    steps = STEPS if full else SMOKE_STEPS
+    reps = REPS if full else 2
     results = {}
-    for B in BATCHES:
+    for B in batches:
         batch = {"tokens": jax.random.randint(key, (B, PROMPT), 0,
                                               cfg.vocab_size)}
         budgets = jnp.where(jnp.arange(B) % 2 == 0, 10.0, 0.5)
         eng = ServeEngine(cfg, qparams, max_len=64, controller=ctrl)
         eng.set_budget(budgets)
-        grouped = _bench(eng, batch, STEPS)
+        grouped = _bench(eng, batch, steps, reps)
         with ops.row_dispatch("vmap"):                # baseline traces here
             eng_v = ServeEngine(cfg, qparams, max_len=64, controller=ctrl)
             eng_v.set_budget(budgets)
-            vmapped = _bench(eng_v, batch, STEPS)
+            vmapped = _bench(eng_v, batch, steps, reps)
         results[B] = {
             "grouped_tok_s": round(grouped, 1),
             "vmap_tok_s": round(vmapped, 1),
@@ -83,34 +88,39 @@ def main() -> int:
         print(f"B={B:>2}: grouped {grouped:8.1f} tok/s | per-row vmap "
               f"{vmapped:8.1f} tok/s ({grouped / vmapped:4.2f}x)")
 
-    # ---- per-request EDP through the continuous API (RequestStats) -------
-    eng = ServeEngine(cfg, qparams, max_len=64, controller=ctrl,
-                      n_slots=32, prefill_len=PROMPT, decode_block=8)
-    rng = np.random.default_rng(0)
-    rids = [eng.submit(rng.integers(0, cfg.vocab_size, (PROMPT,)),
-                       max_new_tokens=8,
-                       budget_s=(10.0 if i % 2 == 0 else 0.5))
-            for i in range(32)]
-    res = eng.run()
-    edp8 = float(np.mean([res[r].edp for i, r in enumerate(rids)
-                          if i % 2 == 0]))
-    edp4 = float(np.mean([res[r].edp for i, r in enumerate(rids)
-                          if i % 2 == 1]))
-    print(f"per-request EDP (32 requests, mixed budgets): int8 rows "
-          f"{edp8:.3e} J·s | int4 rows {edp4:.3e} J·s "
-          f"({edp8 / edp4:.1f}x) — traces: "
-          f"prefill={eng.stats.prefill_traces} "
-          f"decode={eng.stats.decode_traces}")
-
     speedup32 = results[32]["grouped_speedup_vs_vmap"]
-    ok = speedup32 >= 1.0 and 0 < edp4 < edp8
+    ok = speedup32 >= 1.0
     LAST_RESULTS.clear()
     LAST_RESULTS.update({
-        "steps": STEPS, "prompt_len": PROMPT,
+        "steps": steps, "prompt_len": PROMPT,
         "grouped_speedup_vs_vmap_b32": speedup32,
-        "edp_int8_mean_js": edp8, "edp_int4_mean_js": edp4,
         "per_batch": results,
     })
+
+    if full:
+        # ---- per-request EDP through the continuous API ------------------
+        # (smoke skips this: serve_runtime + cnn_serve gate the same
+        # per-request EDP ordering on the CI path)
+        eng = ServeEngine(cfg, qparams, max_len=64, controller=ctrl,
+                          n_slots=32, prefill_len=PROMPT, decode_block=8)
+        rng = np.random.default_rng(0)
+        rids = [eng.submit(rng.integers(0, cfg.vocab_size, (PROMPT,)),
+                           max_new_tokens=8,
+                           budget_s=(10.0 if i % 2 == 0 else 0.5))
+                for i in range(32)]
+        res = eng.run()
+        edp8 = float(np.mean([res[r].edp for i, r in enumerate(rids)
+                              if i % 2 == 0]))
+        edp4 = float(np.mean([res[r].edp for i, r in enumerate(rids)
+                              if i % 2 == 1]))
+        print(f"per-request EDP (32 requests, mixed budgets): int8 rows "
+              f"{edp8:.3e} J·s | int4 rows {edp4:.3e} J·s "
+              f"({edp8 / edp4:.1f}x) — traces: "
+              f"prefill={eng.stats.prefill_traces} "
+              f"decode={eng.stats.decode_traces}")
+        ok = ok and 0 < edp4 < edp8
+        LAST_RESULTS.update({"edp_int8_mean_js": edp8,
+                             "edp_int4_mean_js": edp4})
     print(f"claim (grouped >= vmap at B=32, EDP ordered): "
           f"{speedup32:.2f}x -> {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1

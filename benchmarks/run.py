@@ -4,14 +4,17 @@
 non-zero if any paper-claim check fails.
 
 ``--smoke`` is the headless CI mode: it runs the analytic modules (no
-dry-run artifacts required, so the roofline is skipped), records per-
-module wall time and status into a ``BENCH_*.json`` file (``--out``,
-default ``BENCH_smoke.json``), and still exits non-zero on any paper-
-claim failure — CI marks the step non-blocking so the perf trajectory
-accumulates without gating merges."""
+dry-run artifacts required, so the roofline is skipped) at REDUCED depth
+(smaller batch/step grids — the CI smoke must stay well under the
+tier-1 budget; add ``--full`` to keep full benchmark depth), records
+per-module wall time and status into a ``BENCH_*.json`` file
+(``--out``, default ``BENCH_smoke.json``), and still exits non-zero on
+any paper-claim failure — CI marks the step non-blocking so the perf
+trajectory accumulates without gating merges."""
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import platform
 import time
@@ -22,14 +25,17 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="headless analytic subset + BENCH json record")
+    ap.add_argument("--full", action="store_true",
+                    help="keep full benchmark depth even under --smoke")
     ap.add_argument("--out", default="BENCH_smoke.json",
                     help="where --smoke writes its record")
     args = ap.parse_args(argv)
+    full = args.full or not args.smoke
 
     from benchmarks import (calibrate, cnn_serve, fig5_runtimes,
                             fig6_technology, fig7_dse, fig8_breakdown,
-                            grouped_dispatch, roofline, serve_throughput,
-                            table7_bitfluid, table8_sota)
+                            grouped_dispatch, roofline, serve_runtime,
+                            serve_throughput, table7_bitfluid, table8_sota)
     mods = [
         ("calibrate", calibrate),
         ("fig5_runtimes", fig5_runtimes),
@@ -41,6 +47,7 @@ def main(argv=None) -> int:
         ("serve_throughput", serve_throughput),
         ("grouped_dispatch", grouped_dispatch),
         ("cnn_serve", cnn_serve),
+        ("serve_runtime", serve_runtime),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))
@@ -50,8 +57,11 @@ def main(argv=None) -> int:
     for name, mod in mods:
         print(f"\n===== {name} =====")
         t0 = time.time()
+        # depth-aware modules take full=; the rest keep a bare main()
+        kw = ({"full": full}
+              if "full" in inspect.signature(mod.main).parameters else {})
         try:
-            rc = mod.main()
+            rc = mod.main(**kw)
         except Exception as e:                      # noqa: BLE001
             print(f"ERROR in {name}: {e!r}")
             rc = 1

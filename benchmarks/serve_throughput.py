@@ -23,7 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 BATCHES = (1, 8, 32)
+SMOKE_BATCHES = (1,)        # dispatch-bound claim is strongest at small B
 STEPS = 16
+SMOKE_STEPS = 8
 PROMPT = 8
 LAST_RESULTS: dict = {}
 
@@ -31,18 +33,18 @@ LAST_RESULTS: dict = {}
 REPS = 3
 
 
-def _bench(eng, batch, steps, *, fused):
+def _bench(eng, batch, steps, *, fused, reps=REPS):
     out = eng.generate(batch, steps, fused=fused)     # warm the traces
     np.asarray(out)
     best = float("inf")
-    for _ in range(REPS):                             # best-of-N: CI hosts
+    for _ in range(reps):                             # best-of-N: CI hosts
         t0 = time.perf_counter()                      # are noisy neighbors
         np.asarray(eng.generate(batch, steps, fused=fused))
         best = min(best, time.perf_counter() - t0)
     return batch["tokens"].shape[0] * steps / best
 
 
-def main() -> int:
+def main(full: bool = True) -> int:
     from repro import configs
     from repro.core import policy as pol
     from repro.models import lm
@@ -58,37 +60,47 @@ def main() -> int:
         {"int4": pol.fixed(4), "int8": pol.fixed(8)},
         {"int4": 1.0, "int8": 2.0}, n)
 
+    batches = BATCHES if full else SMOKE_BATCHES
+    steps = STEPS if full else SMOKE_STEPS
+    reps = REPS                 # reps are cheap next to compiles; keep
+                                # best-of-3 for noisy-neighbor robustness
     results = {}
-    for B in BATCHES:
+    for B in batches:
         eng = ServeEngine(cfg, qparams, max_len=64, controller=ctrl)
         batch = {"tokens": jax.random.randint(key, (B, PROMPT), 0,
                                               cfg.vocab_size)}
         eng.set_budget(10.0)                          # fixed int8, (L,) bits
-        fixed_fused = _bench(eng, batch, STEPS, fused=True)
-        fixed_loop = _bench(eng, batch, STEPS, fused=False)
-        # per-request budgets: alternate int8/int4 rows, (B, L) bit matrix
-        eng.set_budget(jnp.where(jnp.arange(B) % 2 == 0, 10.0, 0.5))
-        mixed_fused = _bench(eng, batch, STEPS, fused=True)
+        fixed_fused = _bench(eng, batch, steps, fused=True, reps=reps)
+        fixed_loop = _bench(eng, batch, steps, fused=False, reps=reps)
         results[B] = {
             "fixed_int8_fused_tok_s": round(fixed_fused, 1),
             "fixed_int8_loop_tok_s": round(fixed_loop, 1),
-            "mixed_budgets_fused_tok_s": round(mixed_fused, 1),
             "fused_speedup_vs_loop": round(fixed_fused / fixed_loop, 2),
-            "mixed_precision_cost": round(fixed_fused / mixed_fused, 2),
         }
-        print(f"B={B:>2}: fused {fixed_fused:8.1f} tok/s | loop "
-              f"{fixed_loop:8.1f} tok/s ({fixed_fused / fixed_loop:4.2f}x) "
-              f"| mixed-budget fused {mixed_fused:8.1f} tok/s")
+        line = (f"B={B:>2}: fused {fixed_fused:8.1f} tok/s | loop "
+                f"{fixed_loop:8.1f} tok/s ({fixed_fused / fixed_loop:4.2f}x)")
+        if full:
+            # per-request budgets: alternate int8/int4 rows, (B, L) bit
+            # matrix (smoke skips it — the grouped-dispatch benchmark
+            # owns the mixed-precision overhead trend)
+            eng.set_budget(jnp.where(jnp.arange(B) % 2 == 0, 10.0, 0.5))
+            mixed_fused = _bench(eng, batch, steps, fused=True, reps=reps)
+            results[B].update({
+                "mixed_budgets_fused_tok_s": round(mixed_fused, 1),
+                "mixed_precision_cost": round(fixed_fused / mixed_fused, 2),
+            })
+            line += f" | mixed-budget fused {mixed_fused:8.1f} tok/s"
+        print(line)
 
-    speedups = [results[B]["fused_speedup_vs_loop"] for B in BATCHES]
+    speedups = [results[B]["fused_speedup_vs_loop"] for B in batches]
     geomean = float(np.prod(speedups) ** (1.0 / len(speedups)))
     LAST_RESULTS.clear()
     LAST_RESULTS.update(
-        {"steps": STEPS, "prompt_len": PROMPT,
+        {"steps": steps, "prompt_len": PROMPT,
          "fused_speedup_geomean": round(geomean, 2), "per_batch": results})
     ok = geomean >= 1.1
     print(f"claim (scan-fused vs per-token loop, geomean over "
-          f"B={list(BATCHES)}): {geomean:.2f}x -> "
+          f"B={list(batches)}): {geomean:.2f}x -> "
           f"{'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

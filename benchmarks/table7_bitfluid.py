@@ -38,7 +38,7 @@ def run():
     return reports
 
 
-def main() -> int:
+def main(full: bool = True) -> int:
     reports = run()
     base = reports["int8"]
     # paper normalizes energy so that INT4 consumes less absolute energy
@@ -46,7 +46,9 @@ def main() -> int:
     # report our simulator's direct normalization and the paper's values.
     from repro.serve.cnn import hawq_fidelity_sweep
 
-    fid, n_traces = hawq_fidelity_sweep()
+    # smoke shrinks the serve-fidelity image (same program structure,
+    # same trace-count gate, lighter compile); --full keeps paper depth
+    fid, n_traces = hawq_fidelity_sweep(image=32 if full else 16)
     print("table7: HAWQ-V3 ResNet18 on BF-IMNA (LR/SRAM) + serve kernels")
     print("constraint,avg_bits,norm_energy,norm_latency,edp_rel,"
           "paper_edp_ordering,serve_fidelity,size_mb,top1")

@@ -4,6 +4,11 @@ BudgetController that turns each request's latency budget into its own
 per-layer bit vector — precision is pure runtime data, so interactive
 traffic, background traffic, and everything between share one program.
 
+Act two closes the loop (DESIGN.md §8): the same stream under a
+system-level EDP SLO with a FluidController — every admission's priced
+AP cost is charged against the window, and later requests resolve from
+the REMAINING budget, degrading precision live.
+
   PYTHONPATH=src python examples/bitfluid_serving.py
 """
 import time
@@ -15,6 +20,7 @@ from repro import configs
 from repro.core import policy as pol
 from repro.data.pipeline import make_batch
 from repro.models import lm
+from repro.serve import aggregate, predict_table
 from repro.serve.engine import ServeEngine
 
 
@@ -64,6 +70,35 @@ def main():
           f"decode x{eng.stats.decode_traces} — per-request budgets, slot "
           f"churn, and sampling params never touch compiled code (the "
           f"paper's zero-overhead bit fluidity, per request).")
+
+    # ---- act two: the same stream, closed-loop, under an EDP SLO --------
+    # predictions are deliberately optimistic (half the priced cost): an
+    # open loop would trust them and overspend; the FluidController sees
+    # every admission's actual charge and adapts the tail of the stream
+    preds = predict_table(lm.layer_gemm_dims(cfg), ctrl.configs,
+                          axis="edp", units=12 + 6,   # tokens per request
+                          head=lm.head_gemm_dims(cfg), optimism=0.5)
+    slo = len(workload) * preds["int8"] * 1.2       # tight system budget
+    fluid = pol.FluidController(ctrl.configs, preds, n, budget_axis="edp",
+                                slo=slo, window=len(workload))
+    eng2 = ServeEngine(cfg, qparams, max_len=128, controller=fluid,
+                       n_slots=2, prefill_len=16, decode_block=4)
+    rids2 = [eng2.submit(np.asarray(make_batch(1, i, 1, 12, cfg.vocab_size)
+                                    ["tokens"][0]), max_new_tokens=6)
+             for i in range(len(workload))]         # no budgets: SLO drives
+    results2 = eng2.run()
+    print(f"\nclosed loop (EDP SLO {slo:.2e} J·s over "
+          f"{len(workload)} requests):")
+    for i, rid in enumerate(rids2):
+        st = results2[rid]
+        print(f"  req{i}: {st.mean_wbits:.1f} mean wbits, "
+              f"EDP {st.edp:.2e} J·s")
+    agg = aggregate(results2.values())
+    print(f"spent {agg['edp']:.2e} of {slo:.2e} J·s "
+          f"({agg['edp'] / slo:.2f}x SLO) — precision degraded mid-stream "
+          f"to honor the budget; still compiled once "
+          f"(prefill x{eng2.stats.prefill_traces}, "
+          f"decode x{eng2.stats.decode_traces}).")
 
 
 if __name__ == "__main__":

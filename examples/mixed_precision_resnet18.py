@@ -62,6 +62,22 @@ def main():
               f"ap_latency={s.ap_latency_s * 1e6:7.1f}us "
               f"ap_energy={s.ap_energy_j * 1e3:6.3f}mJ edp={s.edp:.3e}")
 
+    # ---- closed loop: the SLO picks the precision (DESIGN.md §8) --------
+    # no per-image budgets at all — a FluidController charges each image's
+    # priced cost against a tight system-level EDP window, so the batch
+    # degrades precision image by image to honor it, in the SAME program
+    slo = 4 * preds["hawqv3-int8"] * 0.7
+    fluid = pol.FluidController.from_open_loop(ctrl, slo=slo, window=4)
+    eng2 = CNNServeEngine(params, layers, controller=fluid, max_batch=4)
+    _, stats2 = eng2.serve(x)
+    print(f"\nclosed loop (EDP SLO {slo:.3e} J·s for the batch, no "
+          f"per-image budgets) — forward traces: "
+          f"{eng2.stats.forward_traces}")
+    for s in stats2:
+        print(f"  img{s.index}: headroom={s.budget:.2e} "
+              f"mean_wbits={s.mean_wbits:.2f} edp={s.edp:.3e}")
+    print(f"spent {sum(s.edp for s in stats2):.3e} of {slo:.3e} J·s")
+
 
 if __name__ == "__main__":
     main()

@@ -22,7 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.apsim.energy import TechParams, SRAM
 from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, _gemm_layer, area_mm2
@@ -159,16 +161,7 @@ def price_bit_vector(gemms: Sequence[Sequence],
             f"model's {len(gemms)} bit slots")
     cyc, en = [], []
     for dims, w, a in zip(gemms, wvec, avec):
-        Mw, Ma = _clamp_bits(w), _clamp_bits(a)
-        c = e = 0.0
-        for item in dims:
-            if isinstance(item, Layer):
-                ci, ei = layer_gemm_cost(item, Mw, Ma, cfg=cfg, tech=tech)
-            else:
-                K, N = item
-                ci, ei = gemv_cost(K, N, Mw, Ma, cfg=cfg, tech=tech)
-            c += ci
-            e += ei
+        c, e = _slot_cost(dims, _clamp_bits(w), _clamp_bits(a), cfg, tech)
         cyc.append(c)
         en.append(e)
     if head is not None:
@@ -177,6 +170,89 @@ def price_bit_vector(gemms: Sequence[Sequence],
         cyc.append(ci)
         en.append(ei)
     return BitVectorCost(tuple(cyc), tuple(en), cfg.freq_hz)
+
+
+def _slot_cost(dims: Sequence, Mw: int, Ma: int, cfg: BFIMNAConfig,
+               tech: TechParams) -> Tuple[float, float]:
+    """(cycles, energy_j) of one bit slot's GEMM descriptors at (Mw, Ma).
+
+    Single accumulation point for both the per-vector and per-matrix
+    pricers, so the two are bit-identical (same item order, same float
+    summation order)."""
+    c = e = 0.0
+    for item in dims:
+        if isinstance(item, Layer):
+            ci, ei = layer_gemm_cost(item, Mw, Ma, cfg=cfg, tech=tech)
+        else:
+            K, N = item
+            ci, ei = gemv_cost(K, N, Mw, Ma, cfg=cfg, tech=tech)
+        c += ci
+        e += ei
+    return c, e
+
+
+def price_bit_matrix(gemms: Sequence[Sequence], wmat, amat, *,
+                     head: Optional[Tuple[int, int]] = None,
+                     cfg: BFIMNAConfig = LR_CONFIG,
+                     tech: TechParams = SRAM) -> List[BitVectorCost]:
+    """Price a whole ``(B, n_slots)`` bit matrix in one pass.
+
+    The serving runtime admits batches, not vectors: every admission
+    round resolves a ``(B, n_slots)`` bit matrix, and pricing it row by
+    row through :func:`price_bit_vector` costs ``B * n_slots`` Python
+    loop iterations even when the controller only ever emits a handful
+    of distinct configurations.  Here the analytic mapping runs once per
+    *distinct clamped (wbits, abits) pair per slot* — the matrix then
+    gathers its per-slot costs with numpy, so a B=32 batch over a
+    5-config controller pays ~``n_pairs * n_slots`` mapping lookups
+    (all LRU-cached) plus one vectorized gather.  Rows with identical
+    bit vectors share ONE :class:`BitVectorCost` object (callers rely on
+    identity for their own caches).  Row semantics are exactly
+    :func:`price_bit_vector`'s, bit-identical per row.
+    """
+    wmat = np.asarray(wmat, np.int64)
+    amat = np.asarray(amat, np.int64)
+    if wmat.ndim == 1:
+        wmat, amat = wmat[None], amat[None]
+    if wmat.shape != amat.shape or wmat.ndim != 2:
+        raise ValueError(f"bit matrices must share a (B, n_slots) shape, "
+                         f"got {wmat.shape} / {amat.shape}")
+    B, L = wmat.shape
+    if L != len(gemms):
+        raise ValueError(f"bit matrices (n_slots {L}) do not match the "
+                         f"model's {len(gemms)} bit slots")
+    wc = np.clip(wmat, 1, 16)
+    ac = np.clip(amat, 1, 16)
+    pairs = np.stack([wc, ac], axis=-1).reshape(-1, 2)
+    uniq, inv = np.unique(pairs, axis=0, return_inverse=True)
+    inv = inv.reshape(B, L)
+    cyc_tab = np.empty((uniq.shape[0], L))
+    en_tab = np.empty((uniq.shape[0], L))
+    head_tab = np.empty((uniq.shape[0], 2))
+    for pi, (Mw, Ma) in enumerate(uniq):
+        for s, dims in enumerate(gemms):
+            cyc_tab[pi, s], en_tab[pi, s] = _slot_cost(
+                dims, int(Mw), int(Ma), cfg, tech)
+        if head is not None:
+            head_tab[pi] = gemv_cost(head[0], head[1], int(Mw), int(Ma),
+                                     cfg=cfg, tech=tech)
+    cyc = cyc_tab[inv, np.arange(L)[None, :]]            # (B, L) gathers
+    en = en_tab[inv, np.arange(L)[None, :]]
+    out: List[BitVectorCost] = []
+    shared: Dict[bytes, BitVectorCost] = {}
+    for i in range(B):
+        key = wc[i].tobytes() + b"|" + ac[i].tobytes()
+        hit = shared.get(key)
+        if hit is None:
+            pc = tuple(float(v) for v in cyc[i])
+            pe = tuple(float(v) for v in en[i])
+            if head is not None:
+                hc, he = head_tab[inv[i, -1]]
+                pc, pe = pc + (float(hc),), pe + (float(he),)
+            hit = BitVectorCost(pc, pe, cfg.freq_hz)
+            shared[key] = hit
+        out.append(hit)
+    return out
 
 
 PAPER_TABLE8 = {

@@ -11,12 +11,17 @@ Built-ins:
   * ``hawq_v3(constraint)``           — the paper's Table VII ResNet18 study
                                         (INT4/INT8 mixes for low/medium/high
                                         latency budgets, from HAWQ-V3 [53]).
-  * ``BudgetController``              — dynamic: picks among registered
-                                        configurations at runtime from a
-                                        latency/EDP budget signal (paper §V.B
-                                        "switching between the three
-                                        mixed-precision configurations
+  * ``BudgetController``              — dynamic, open-loop: picks among
+                                        registered configurations at runtime
+                                        from a latency/EDP budget signal
+                                        (paper §V.B "switching between the
+                                        three mixed-precision configurations
                                         dynamically").
+  * ``FluidController``               — dynamic, closed-loop: charges each
+                                        admission's priced AP cost against a
+                                        system-level SLO window and resolves
+                                        precision from the REMAINING budget
+                                        (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -158,18 +163,41 @@ class BudgetController:
     # semantics are identical, but budgets on the wrong axis always- or
     # never-fit, so the axis is recorded on the controller itself.
     budget_axis: str = "latency"
+    # admission-hot-path caches (configs/predictions are fixed after
+    # construction; engines resolve on EVERY admission and decode tick,
+    # so the tables must not be rebuilt from Python dicts each time)
+    _order: Optional[Tuple[str, ...]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _tables: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _lats: Optional[jnp.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
-    def order(self):
-        return sorted(self.configs, key=lambda k: self.predicted_latency_s[k])
+    def order(self) -> list:
+        if self._order is None:
+            self._order = tuple(sorted(
+                self.configs, key=lambda k: self.predicted_latency_s[k]))
+        return list(self._order)
 
     def stacked_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(n_configs, n_layers) bit tables, fastest config first."""
-        ws, as_ = [], []
-        for k in self.order():
-            w, a = self.configs[k].vectors(self.n_layers)
-            ws.append(w)
-            as_.append(a)
-        return jnp.stack(ws), jnp.stack(as_)
+        """(n_configs, n_layers) bit tables, fastest config first (cached
+        on the controller — the hot admission path gathers from them)."""
+        if self._tables is None:
+            ws, as_ = [], []
+            for k in self.order():
+                w, a = self.configs[k].vectors(self.n_layers)
+                ws.append(w)
+                as_.append(a)
+            self._tables = (jnp.stack(ws), jnp.stack(as_))
+        return self._tables
+
+    def latency_array(self) -> jnp.ndarray:
+        """Predicted budget-axis costs, fastest config first (cached)."""
+        if self._lats is None:
+            self._lats = jnp.asarray(
+                [self.predicted_latency_s[k] for k in self.order()],
+                jnp.float32)
+        return self._lats
 
     def select(self, budget_s) -> jnp.ndarray:
         """Runtime index into stacked_tables() given a latency budget.
@@ -178,8 +206,7 @@ class BudgetController:
         vector (per-request budgets); the result matches its shape.  Pure
         jnp — budgets are *data*, so per-request precision never retraces.
         """
-        lats = jnp.asarray([self.predicted_latency_s[k] for k in self.order()],
-                           jnp.float32)
+        lats = self.latency_array()
         b = jnp.asarray(budget_s, jnp.float32)
         fits = lats <= b[..., None]                  # (..., n_configs)
         # last (slowest/most accurate) fitting config, else index 0 (fastest)
@@ -193,3 +220,70 @@ class BudgetController:
         wtab, atab = self.stacked_tables()
         idx = self.select(budget_s)
         return wtab[idx], atab[idx]
+
+
+@dataclasses.dataclass
+class FluidController(BudgetController):
+    """Closed-loop bit fluidity: precision from the REMAINING budget.
+
+    :class:`BudgetController` is open-loop — a static prediction table
+    maps each request's own budget to a configuration once, with no
+    feedback from what the system has actually spent.  The fluid
+    controller closes the loop the way the paper's §V.B run describes
+    ("switching between the three mixed-precision configurations
+    dynamically, as imposed by the changing run-time resource
+    requirements"): the serving runtime charges every admission's
+    *priced* AP cost (``serve/accounting.py``) against a system-level
+    SLO window of ``slo`` budget-axis units per ``window`` admissions,
+    and each new admission's effective budget is its share of whatever
+    budget remains — so over-spending early requests push later ones
+    into cheaper (lower-bit) configurations and under-spending relaxes
+    them, Table VII's latency-budget sweep run as a live control loop
+    (cf. LRMP's runtime precision re-allocation, arXiv:2312.03146).
+
+    The loop lives entirely host-side: ``admission_budget()`` returns an
+    ordinary float, selection stays the inherited pure-data gather, so
+    closed-loop config switches never retrace.  Window rollover expires
+    unused credit but carries debt, keeping the long-run average at the
+    SLO.
+    """
+    slo: float = float("inf")      # budget-axis units per window
+    window: int = 32               # admissions per SLO window
+    spent: float = 0.0             # charged so far in this window
+    served: int = 0                # admissions charged in this window
+
+    def headroom(self) -> float:
+        """Per-admission share of the remaining window budget."""
+        left = max(self.window - self.served, 1)
+        return max(self.slo - self.spent, 0.0) / left
+
+    def admission_budget(self, requested: Optional[float] = None) -> float:
+        """Effective budget for the next admission: the closed-loop
+        headroom, tightened by the request's own budget when it has one."""
+        h = self.headroom()
+        return h if requested is None else min(float(requested), h)
+
+    def charge(self, amount: float) -> None:
+        """Record one admission's actual (priced) budget-axis cost."""
+        self.spent += float(amount)
+        self.served += 1
+        if self.served >= self.window:
+            # roll the window: unused credit expires, debt carries over
+            self.spent = max(self.spent - self.slo, 0.0)
+            self.served = 0
+
+    def reconcile(self, delta: float) -> None:
+        """Adjust the ledger after a request finishes: admissions are
+        charged their PLANNED unit count up front (so headroom reacts
+        immediately), and an early-terminating request (eos) refunds the
+        difference here — the window's spend tracks reality, not plans."""
+        self.spent = max(self.spent + float(delta), 0.0)
+
+    @classmethod
+    def from_open_loop(cls, ctrl: BudgetController, *, slo: float,
+                       window: int = 32) -> "FluidController":
+        """Wrap an existing controller's configs/predictions in a
+        closed-loop SLO window (axis carried over)."""
+        return cls(dict(ctrl.configs), dict(ctrl.predicted_latency_s),
+                   ctrl.n_layers, budget_axis=ctrl.budget_axis,
+                   slo=slo, window=window)

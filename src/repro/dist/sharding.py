@@ -150,6 +150,26 @@ def bits_pspec(leaf) -> Tuple[Optional[str], ...]:
     return (None,) * leaf.ndim
 
 
+def budgets_pspec(leaf) -> Tuple[Optional[str], ...]:
+    """Per-request (B,) budget vectors — the serving runtime's batched
+    admission state — shard over dp like the rows they gate, so the
+    controller's select/gather lands its (B, L) bit matrix already
+    dp-placed instead of resharding a replicated result."""
+    if leaf.ndim >= 1:
+        return ("dp",) + (None,) * (leaf.ndim - 1)
+    return ()
+
+
+def shard_budgets(budgets, mesh=None):
+    """device_put a per-request budget vector onto the active mesh
+    (identity off-mesh; replication fallback for non-dividing B)."""
+    mesh = mesh if mesh is not None else api.active_mesh()
+    if mesh is None:
+        return budgets
+    return jax.device_put(budgets, NamedSharding(
+        mesh, logical_to_mesh(mesh, budgets_pspec(budgets), budgets.shape)))
+
+
 def shard_bits(bits, mesh=None):
     """device_put a resolved bit table onto the active mesh (identity
     off-mesh); replication fallback covers non-dividing batch sizes."""

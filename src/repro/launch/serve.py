@@ -14,6 +14,12 @@ Two modes:
   * ``--batch``: the legacy whole-batch path (one budget per batch);
     kept for A/B comparison and the paper's §V.B batch-switch story.
 
+``--slo-edp <J*s>`` (continuous mode) swaps the open-loop controller
+for a closed-loop :class:`repro.core.policy.FluidController`: every
+admission's priced AP cost is charged against the system-level EDP SLO
+window and later requests resolve from the REMAINING budget — the
+paper's dynamic switching as a live control loop (DESIGN.md §8).
+
 With ``--ckpt-dir`` it restores trained weights (from launch/train.py)
 before quantizing — train -> checkpoint -> quantized bit-fluid serving is
 the full production path.
@@ -31,6 +37,7 @@ from repro import configs
 from repro.core import policy as pol
 from repro.data.pipeline import make_batch
 from repro.models import lm
+from repro.serve import aggregate, predict_table
 from repro.serve.engine import ServeEngine
 from repro.train.checkpoint import latest_step, restore_checkpoint
 
@@ -40,6 +47,19 @@ def default_controller(n: int) -> pol.BudgetController:
         {"int4": pol.fixed(4), "mixed": pol.per_layer([8, 4], name="mixed"),
          "int8": pol.fixed(8)},
         {"int4": 0.5, "mixed": 0.75, "int8": 1.0}, n)
+
+
+def fluid_controller(cfg, n: int, args) -> pol.FluidController:
+    """Closed-loop controller for --slo-edp: the same three configs, but
+    predicted at their PRICED per-request AP EDP, charged against a
+    system-level SLO window the size of the request stream."""
+    base = default_controller(n)
+    preds = predict_table(
+        lm.layer_gemm_dims(cfg), base.configs, axis="edp",
+        units=args.prompt_len + args.steps,     # planned tokens/request
+        head=lm.head_gemm_dims(cfg))
+    return pol.FluidController(base.configs, preds, n, budget_axis="edp",
+                               slo=args.slo_edp, window=args.requests)
 
 
 def main() -> None:
@@ -58,12 +78,25 @@ def main() -> None:
     ap.add_argument("--decode-block", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--budgets", type=float, nargs="+", default=[2.0, 0.5])
+    ap.add_argument("--budgets", type=float, nargs="+", default=None,
+                    help="per-request latency budgets, cycled over the "
+                         "stream (default: 2.0 0.5)")
+    ap.add_argument("--slo-edp", type=float, default=0.0,
+                    help="closed-loop mode: total modeled AP EDP budget "
+                         "(J*s) for the whole request stream (0 = open "
+                         "loop; continuous mode only)")
     ap.add_argument("--kv-bits", type=int, default=0, choices=(0, 8))
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
     if args.continuous and args.batch:
         ap.error("--continuous and --batch are mutually exclusive")
+    if args.slo_edp and args.batch:
+        ap.error("--slo-edp needs the continuous scheduler")
+    if args.slo_edp and args.budgets is not None:
+        ap.error("--budgets are latency budgets; with --slo-edp the EDP "
+                 "SLO window drives precision — omit --budgets")
+    if args.budgets is None:
+        args.budgets = [2.0, 0.5]
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))
@@ -78,14 +111,17 @@ def main() -> None:
         print(f"[serve] restored weights from step {step}")
     qparams = lm.quantize_params(params, cfg)
 
-    ctrl = default_controller(lm.n_bit_slots(cfg))
+    n = lm.n_bit_slots(cfg)
     if args.batch:
-        _serve_batches(cfg, qparams, ctrl, args)
+        _serve_batches(cfg, qparams, default_controller(n), args)
+    elif args.slo_edp:
+        _serve_continuous(cfg, qparams, fluid_controller(cfg, n, args), args)
     else:
-        _serve_continuous(cfg, qparams, ctrl, args)
+        _serve_continuous(cfg, qparams, default_controller(n), args)
 
 
 def _serve_continuous(cfg, qparams, ctrl, args) -> None:
+    closed = isinstance(ctrl, pol.FluidController)
     eng = ServeEngine(cfg, qparams, max_len=args.max_len, controller=ctrl,
                       n_slots=args.n_slots, prefill_len=args.prompt_len,
                       decode_block=args.decode_block)
@@ -94,16 +130,17 @@ def _serve_continuous(cfg, qparams, ctrl, args) -> None:
     for i in range(args.requests):
         prompt = make_batch(7, i, 1, args.prompt_len,
                             cfg.vocab_size)["tokens"][0]
-        rids.append(eng.submit(np.asarray(prompt),
-                               max_new_tokens=args.steps,
-                               budget_s=args.budgets[i % len(args.budgets)],
-                               temperature=args.temperature,
-                               top_k=args.top_k))
+        rids.append(eng.submit(
+            np.asarray(prompt), max_new_tokens=args.steps,
+            # closed loop: the SLO window picks precision, not requests
+            budget_s=(None if closed
+                      else args.budgets[i % len(args.budgets)]),
+            temperature=args.temperature, top_k=args.top_k))
     res = eng.run()
     dt = time.time() - t0
     for rid in rids:
         st = res[rid]
-        print(f"[serve] req{rid}: budget={st.budget_s:g}s -> "
+        print(f"[serve] req{rid}: budget={st.budget_s:.3g} -> "
               f"{st.mean_wbits:.1f} mean wbits, {st.n_tokens} tokens "
               f"(slot {st.slot}, {st.finished_s - st.submitted_s:.2f}s, "
               f"AP {st.ap_latency_s * 1e3:.2f}ms / "
@@ -111,9 +148,14 @@ def _serve_continuous(cfg, qparams, ctrl, args) -> None:
     print(f"[serve] {eng.stats.tokens} tokens in {dt:.2f}s "
           f"({eng.stats.tokens / dt:.1f} tok/s) across "
           f"{args.requests} requests on {args.n_slots} slots")
+    if closed:
+        agg = aggregate(res.values())
+        print(f"[serve] closed loop: spent {agg['edp']:.3e} of "
+              f"{ctrl.slo:.3e} J·s EDP SLO ({agg['edp'] / ctrl.slo:.2f}x) "
+              f"over {agg['requests']} admissions")
     print(f"[serve] compiled programs: prefill={eng.stats.prefill_traces} "
           f"decode={eng.stats.decode_traces} (fluid across "
-          f"{len(set(args.budgets))} budget levels, "
+          f"{1 if closed else len(set(args.budgets))} budget levels, "
           f"{eng.stats.admitted} admissions)")
 
 

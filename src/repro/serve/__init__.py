@@ -1,2 +1,6 @@
+from repro.serve.accounting import (CostRecord, ImageStats,  # noqa: F401
+                                    RequestStats, RuntimeStats, aggregate,
+                                    predict_table)
 from repro.serve.cnn import CNNServeEngine  # noqa: F401
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.runtime import ServeRuntime, SlotTable  # noqa: F401

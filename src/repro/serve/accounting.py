@@ -1,0 +1,255 @@
+"""Workload-agnostic serving accounting (DESIGN.md §8).
+
+One cost vocabulary for every serve workload: :class:`RuntimeStats`
+counts compiled-program traces (the zero-retrace proof) and engine-wide
+totals; :class:`CostRecord` is the single per-request record both the LM
+engine (:class:`RequestStats`) and the CNN engine (:class:`ImageStats`)
+specialize — each request carries its resolved precision and the AP cost
+of that precision priced through the paper's calibrated model, so
+latency/energy/EDP read identically across workloads and aggregate with
+:func:`aggregate`; :class:`BitVectorPricer` is the shared cached pricer
+(vector and one-pass matrix forms) whose charges also drive the
+closed-loop :class:`repro.core.policy.FluidController`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.apsim import metrics as apm
+
+
+class RuntimeStats:
+    """Engine-wide serving counters; trace counts prove zero-retrace.
+
+    Compiled programs are counted generically: an engine calls
+    ``stats.trace("prefill")`` inside the traced function, and readers
+    use the derived ``stats.prefill_traces`` / ``decode_traces`` /
+    ``forward_traces`` attributes — any ``<program>_traces`` name reads
+    the counter for ``<program>`` (0 if it never traced).
+    """
+
+    def __init__(self) -> None:
+        self.traces: Dict[str, int] = {}
+        self.tokens = 0                 # LM: tokens sampled
+        self.admitted = 0               # LM: requests admitted into slots
+        self.completed = 0              # LM: requests retired
+        self.batches = 0                # CNN: serve() calls
+        self.images = 0                 # CNN: real (unpadded) images served
+
+    def trace(self, program: str) -> None:
+        self.traces[program] = self.traces.get(program, 0) + 1
+
+    def __getattr__(self, name: str) -> int:
+        if name.endswith("_traces"):
+            return self.__dict__.get("traces", {}).get(name[:-7], 0)
+        raise AttributeError(name)
+
+    def __repr__(self) -> str:          # pragma: no cover - debug aid
+        return (f"RuntimeStats(traces={self.traces}, tokens={self.tokens}, "
+                f"admitted={self.admitted}, completed={self.completed}, "
+                f"batches={self.batches}, images={self.images})")
+
+
+@dataclasses.dataclass
+class CostRecord:
+    """Per-request serving record shared by every workload.
+
+    Besides wall-clock timing, each request carries its *priced* AP
+    cost: at admission the resolved per-layer bit vector is pushed
+    through ``apsim.metrics`` (the paper's calibrated cycle/energy
+    model), so every request reports the latency/energy/EDP it would
+    cost on the BF-IMNA hardware at its own precision — the Table VII
+    accuracy-vs-EDP trade-off, live per request.  ``ap_cost`` prices ONE
+    :meth:`ap_units` unit (LM: one token; CNN: one inference); derived
+    totals scale by the units the request actually processed.
+    """
+    rid: int
+    budget_s: float                     # effective budget (axis units)
+    mean_wbits: float = 0.0             # realized per-layer weight bits
+    ap_cost: Optional[apm.BitVectorCost] = None   # per-layer breakdown
+    submitted_s: float = 0.0
+    finished_s: float = 0.0
+    done: bool = False
+    planned_units: int = 1              # units charged at admission (the
+                                        # runtime reconciles vs ap_units
+                                        # when the request finishes)
+
+    @property
+    def ap_units(self) -> int:
+        """How many ``ap_cost`` units this request processed."""
+        return 1
+
+    @property
+    def latency_s(self) -> float:
+        """Wall-clock submit-to-finish latency (0.0 until done)."""
+        return max(self.finished_s - self.submitted_s, 0.0) if self.done \
+            else 0.0
+
+    @property
+    def ap_latency_s(self) -> float:
+        """Modeled AP latency of every processed unit at this request's
+        precision configuration."""
+        if self.ap_cost is None:
+            return 0.0
+        return self.ap_units * self.ap_cost.latency_s
+
+    @property
+    def ap_energy_j(self) -> float:
+        if self.ap_cost is None:
+            return 0.0
+        return self.ap_units * self.ap_cost.energy_j
+
+    @property
+    def edp(self) -> float:
+        """Modeled AP energy-delay product (J·s) of the whole request."""
+        return self.ap_energy_j * self.ap_latency_s
+
+
+@dataclasses.dataclass
+class RequestStats(CostRecord):
+    """LM request record: token stream + per-token AP pricing."""
+    prompt_len: int = 0
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def processed_tokens(self) -> int:
+        """Tokens this request pushed through the model (prompt + new)."""
+        return self.prompt_len + self.n_tokens
+
+    @property
+    def ap_units(self) -> int:
+        return self.processed_tokens
+
+    @property
+    def ap_cycles_per_token(self) -> float:
+        return 0.0 if self.ap_cost is None else self.ap_cost.cycles
+
+    @property
+    def ap_energy_per_token_j(self) -> float:
+        return 0.0 if self.ap_cost is None else self.ap_cost.energy_j
+
+
+@dataclasses.dataclass
+class ImageStats(CostRecord):
+    """CNN image record: resolved bit vectors + one-inference pricing."""
+    index: int = -1                     # row inside the batch that served it
+    wbits: Tuple[int, ...] = ()
+    abits: Tuple[int, ...] = ()
+
+    @property
+    def budget(self) -> float:
+        return self.budget_s
+
+
+def axis_cost(cost: apm.BitVectorCost, axis: str, units: int = 1) -> float:
+    """One admission's cost on a controller's budget axis (the closed
+    loop's feedback signal): modeled AP latency (s), energy (J), or EDP
+    (J·s) of ``units`` priced units."""
+    lat = units * cost.latency_s
+    if axis == "latency":
+        return lat
+    en = units * cost.energy_j
+    if axis == "energy":
+        return en
+    if axis == "edp":
+        return en * lat
+    raise ValueError(f"unknown budget axis {axis!r}")
+
+
+def aggregate(records: Iterable[CostRecord]) -> Dict[str, float]:
+    """System-level accounting: sums of the per-request records.
+
+    Workload-agnostic (LM and CNN records mix freely), so a deployment
+    serving both reads one ledger; tests pin the invariant that engine
+    stats totals equal these per-request sums.
+    """
+    recs = list(records)
+    return {
+        "requests": len(recs),
+        "completed": sum(1 for r in recs if r.done),
+        "ap_units": sum(r.ap_units for r in recs),
+        "ap_latency_s": sum(r.ap_latency_s for r in recs),
+        "ap_energy_j": sum(r.ap_energy_j for r in recs),
+        "edp": sum(r.edp for r in recs),
+    }
+
+
+def predict_table(gemms: Sequence[Sequence], configs, *, axis: str = "edp",
+                  units: int = 1,
+                  head: Optional[Tuple[int, int]] = None,
+                  optimism: float = 1.0) -> Dict[str, float]:
+    """Build a controller prediction table by PRICING each config.
+
+    Each registered :class:`~repro.core.policy.PrecisionPolicy` is
+    expanded over the workload's bit slots, priced through the AP model,
+    and converted with the exact :func:`axis_cost` math the runtime
+    charges at admission — so predictions and charges cannot drift.
+    ``units`` is the planned AP units per request (LM: prompt + max new
+    tokens); ``optimism`` scales the table (< 1 = optimistic — the
+    closed-loop demos use 0.5 to show the loop correcting for it).
+    """
+    pricer = BitVectorPricer(gemms, head=head)
+    table = {}
+    for name, p in configs.items():
+        wv, av = p.vectors(len(gemms))
+        table[name] = optimism * axis_cost(pricer.price(wv, av), axis,
+                                           units)
+    return table
+
+
+class BitVectorPricer:
+    """Cached AP pricing of resolved bit vectors and matrices.
+
+    Controllers emit a small static set of vectors, so pricing caches by
+    the clamped vector bytes and returns ONE shared
+    :class:`~repro.apsim.metrics.BitVectorCost` object per distinct
+    vector (callers rely on identity).  Batch admissions go through the
+    one-pass :func:`repro.apsim.metrics.price_bit_matrix`.
+    """
+
+    def __init__(self, gemms: Sequence[Sequence], *,
+                 head: Optional[Tuple[int, int]] = None) -> None:
+        self.gemms = tuple(gemms)
+        self.head = head
+        self._cache: Dict[bytes, apm.BitVectorCost] = {}
+
+    @staticmethod
+    def _key(wv: np.ndarray, av: np.ndarray) -> bytes:
+        # clamp exactly like the pricing itself, so clamp-equivalent
+        # vectors share one cached cost object
+        wv = np.clip(wv, 1, 16)
+        av = np.clip(av, 1, 16)
+        return wv.tobytes() + b"|" + av.tobytes()
+
+    def price(self, wv, av) -> apm.BitVectorCost:
+        """AP cycles/energy of one resolved (n_slots,) bit vector pair."""
+        wv = np.asarray(wv, np.int64)
+        av = np.asarray(av, np.int64)
+        key = self._key(wv, av)
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = apm.price_bit_vector(self.gemms, wv.tolist(), av.tolist(),
+                                       head=self.head)
+            self._cache[key] = hit
+        return hit
+
+    def price_matrix(self, wmat, amat) -> List[apm.BitVectorCost]:
+        """Price a (B, n_slots) bit matrix; rows share cached objects."""
+        wmat = np.asarray(wmat, np.int64)
+        amat = np.asarray(amat, np.int64)
+        keys = [self._key(wmat[i], amat[i]) for i in range(wmat.shape[0])]
+        miss = [i for i, k in enumerate(keys) if k not in self._cache]
+        if miss:
+            costs = apm.price_bit_matrix(self.gemms, wmat[miss], amat[miss],
+                                         head=self.head)
+            for i, c in zip(miss, costs):
+                self._cache.setdefault(keys[i], c)
+        return [self._cache[k] for k in keys]

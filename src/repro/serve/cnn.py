@@ -1,25 +1,27 @@
-"""Batched CNN image serving with per-request bit fluidity + EDP pricing.
+"""Batched CNN image serving: the batched-forward workload adapter.
 
 The CNN analogue of :class:`repro.serve.engine.ServeEngine` (DESIGN.md
-§7): weights are quantized/prepacked ONCE at engine construction
+§7/§8): weights are quantized/prepacked ONCE at engine construction
 (``cnn.quantize_cnn_params`` — int8 containers, packed int4 where the
 controller's configurations make a layer eligible), and ONE compiled
 forward serves every batch: each image's latency/EDP budget resolves
-through a :class:`repro.core.policy.BudgetController` into a per-layer
-bit vector, the batch's ``(B, n_gemm)`` bit *matrix* is an ordinary
-traced input executed via the bit-grouped batch dispatch
-(``kernels/ops.py``), and each image's resolved vector is priced through
-the paper's calibrated AP cost model (``apsim.metrics.price_bit_vector``
-over the network's conv/fc GEMM dims) — so per-request AP
+through a :class:`repro.core.policy.BudgetController` (or closed-loop
+:class:`~repro.core.policy.FluidController`, charged image by image)
+into a per-layer bit vector, the batch's ``(B, n_gemm)`` bit *matrix*
+is an ordinary traced input executed via the bit-grouped batch dispatch
+(``kernels/ops.py``), and the whole batch's resolved matrix is priced
+in one pass through the paper's calibrated AP cost model
+(``apsim.metrics.price_bit_matrix``) — per-request AP
 latency/energy/EDP come back with the logits (Table VII, live per
-image).
+image).  Queue/scheduler/stats/pricing plumbing lives in the shared
+:class:`repro.serve.runtime.ServeRuntime`.
 
-Batches pad to a fixed ``max_batch`` so batch-size churn never retraces;
-``CNNServeStats.forward_traces`` proves the zero-retrace property.
+Batches pad to a fixed ``max_batch`` so batch-size churn never
+retraces; ``stats.forward_traces`` proves the zero-retrace property.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -29,48 +31,13 @@ import numpy as np
 from repro.apsim import metrics as apm
 from repro.apsim.workloads import Layer, gemm_layers
 from repro.core.policy import BudgetController, PrecisionPolicy, fixed
-from repro.kernels import ops as kops
+from repro.dist import sharding as shd
 from repro.models import cnn
+from repro.serve.accounting import ImageStats, RuntimeStats  # noqa: F401
+from repro.serve.runtime import ServeRuntime
 
 
-@dataclasses.dataclass
-class CNNServeStats:
-    """Engine-wide counters; ``forward_traces`` proves zero-retrace."""
-    forward_traces: int = 0
-    batches: int = 0
-    images: int = 0
-
-
-@dataclasses.dataclass(frozen=True)
-class ImageStats:
-    """Per-image serving record: the request's resolved precision and its
-    modeled AP cost for ONE inference at that precision (per-layer
-    breakdown on ``ap_cost``)."""
-    index: int
-    budget: float
-    wbits: Tuple[int, ...]
-    abits: Tuple[int, ...]
-    ap_cost: apm.BitVectorCost
-
-    @property
-    def mean_wbits(self) -> float:
-        return sum(self.wbits) / len(self.wbits)
-
-    @property
-    def ap_latency_s(self) -> float:
-        return self.ap_cost.latency_s
-
-    @property
-    def ap_energy_j(self) -> float:
-        return self.ap_cost.energy_j
-
-    @property
-    def edp(self) -> float:
-        """Modeled AP energy-delay product (J*s) of this inference."""
-        return self.ap_cost.edp
-
-
-class CNNServeEngine:
+class CNNServeEngine(ServeRuntime):
     """Batched, bit-fluid CNN inference server.
 
     ``serve(images, budgets)`` runs one batch: ``images`` (B, H, W, C)
@@ -86,7 +53,7 @@ class CNNServeEngine:
     def __init__(self, params: dict, layers: Sequence[Layer], *,
                  controller: Optional[BudgetController] = None,
                  policy: Optional[PrecisionPolicy] = None,
-                 max_batch: int = 8, container: str = "auto"):
+                 max_batch: int = 8, container: str = "auto", mesh=None):
         self.layers = list(layers)
         gl = gemm_layers(self.layers)
         self.n_gemm = len(gl)
@@ -94,17 +61,11 @@ class CNNServeEngine:
             pol = policy or fixed(8)
             controller = BudgetController({pol.name: pol}, {pol.name: 0.0},
                                           self.n_gemm)
-        if controller.n_layers != self.n_gemm:
-            raise ValueError(
-                f"controller resolves {controller.n_layers} bit slots but "
-                f"the network has {self.n_gemm} GEMM (conv/fc) layers")
-        self.controller = controller
+        super().__init__(controller, self.n_gemm,
+                         gemms=apm.network_gemms(self.layers), mesh=mesh,
+                         slot_desc="GEMM (conv/fc) layers")
         self.max_batch = max_batch
         wtab, _ = controller.stacked_tables()
-        # grouped per-row dispatch specializes one GEMM per distinct
-        # weight bit-width the controller can emit (kernels/ops.py)
-        self._families = tuple(sorted(
-            {min(max(int(v), 1), 8) for v in np.asarray(wtab).ravel()}))
         if container == "auto":
             int4_names = cnn.int4_eligible(self.layers, wtab)
             container = "int8"
@@ -123,28 +84,12 @@ class CNNServeEngine:
         self.qparams = cnn.quantize_cnn_params(params, self.layers,
                                                container=container,
                                                int4_names=int4_names)
-        self._gemms = apm.network_gemms(self.layers)
-        self._price_cache: Dict[bytes, apm.BitVectorCost] = {}
-        self.stats = CNNServeStats()
 
         def _fwd(qp, x, wmat, amat):
-            self.stats.forward_traces += 1
+            self.stats.trace("forward")
             return cnn.cnn_forward(qp, x, self.layers, wmat, amat)
 
         self._fwd = jax.jit(_fwd)
-
-    def price_bits(self, wv, av) -> apm.BitVectorCost:
-        """AP cycles/energy of one resolved (n_gemm,) bit vector pair
-        over the network's conv/fc GEMMs (cached — controllers emit a
-        small static set of vectors)."""
-        wv = np.asarray(wv, np.int64)
-        av = np.asarray(av, np.int64)
-        key = wv.tobytes() + b"|" + av.tobytes()
-        hit = self._price_cache.get(key)
-        if hit is None:
-            hit = apm.price_bit_vector(self._gemms, wv.tolist(), av.tolist())
-            self._price_cache[key] = hit
-        return hit
 
     def serve(self, images, budgets=None
               ) -> Tuple[np.ndarray, List[ImageStats]]:
@@ -154,29 +99,44 @@ class CNNServeEngine:
         if not 1 <= B <= self.max_batch:
             raise ValueError(f"batch of {B} images exceeds max_batch="
                              f"{self.max_batch}")
+        submitted = time.time()
         if budgets is None:
-            bud = np.full((B,), 1e30, np.float64)      # unconstrained
+            req: List[Optional[float]] = [None] * B
         else:
-            bud = np.broadcast_to(np.asarray(budgets, np.float64),
-                                  (B,)).copy()
+            req = np.broadcast_to(np.asarray(budgets, np.float64),
+                                  (B,)).tolist()
+        # batch admission planning: closed-loop controllers are charged
+        # image by image, so effective budgets tighten within the batch
+        bud = self.plan_admissions(req)
         # pad to the fixed batch shape: padded rows take the cheapest
         # configuration (budget 0 fits nothing -> fastest) and are dropped
         pad = self.max_batch - B
         if pad:
             images = jnp.pad(images, ((0, pad),) + ((0, 0),) * 3)
             bud = np.concatenate([bud, np.zeros((pad,), np.float64)])
-        wmat, amat = self.controller.resolve(jnp.asarray(bud, jnp.float32))
-        with kops.bit_families(self._families):
+        budv = shd.shard_budgets(jnp.asarray(bud, jnp.float32), self.mesh)
+        wmat, amat = self.controller.resolve(budv)
+        if self.mesh is not None:
+            images = shd.shard_batch({"x": images}, self.mesh)["x"]
+            wmat = shd.shard_bits(wmat, self.mesh)
+            amat = shd.shard_bits(amat, self.mesh)
+        with self.compute_ctx():
             logits = self._fwd(self.qparams, images, wmat, amat)
-        wmat_h = np.asarray(wmat, np.int64)
-        amat_h = np.asarray(amat, np.int64)
-        stats = [
-            ImageStats(index=i, budget=float(bud[i]),
-                       wbits=tuple(int(b) for b in wmat_h[i]),
-                       abits=tuple(int(b) for b in amat_h[i]),
-                       ap_cost=self.price_bits(wmat_h[i], amat_h[i]))
-            for i in range(B)
-        ]
+        wmat_h = np.asarray(wmat, np.int64)[:B]
+        amat_h = np.asarray(amat, np.int64)[:B]
+        costs = self.pricer.price_matrix(wmat_h, amat_h)   # one-pass batch
+        stats = []
+        for i in range(B):
+            rec = ImageStats(
+                rid=self.next_rid(), budget_s=float(bud[i]), index=i,
+                mean_wbits=float(np.mean(wmat_h[i])), ap_cost=costs[i],
+                wbits=tuple(int(b) for b in wmat_h[i]),
+                abits=tuple(int(b) for b in amat_h[i]),
+                submitted_s=submitted)
+            self.requests[rec.rid] = rec
+            self.finish_record(rec.rid)
+            stats.append(rec)
+        self.stats.admitted += B
         self.stats.batches += 1
         self.stats.images += B
         return np.asarray(logits[:B]), stats

@@ -1,39 +1,38 @@
-"""Continuous-batching serving engine with per-request bit fluidity.
+"""Continuous-batching LM serving: the prefill/decode workload adapter.
 
 One compiled prefill + one compiled decode program serve every precision
 configuration AND every mix of configurations across a batch: each
 request carries its own latency budget, resolved by a
-:class:`repro.core.policy.BudgetController` into a per-layer bit vector,
-and the batch's ``(B, n_layers)`` bit *matrix* is an ordinary traced
-input — the TPU realization of the paper's §V.B dynamic mixed-precision
-claim ("switching between the three mixed-precision configurations
-dynamically, as imposed by the changing run-time resource requirements"),
-now at request granularity (cf. LRMP, arXiv:2312.03146).
+:class:`repro.core.policy.BudgetController` (or closed-loop
+:class:`~repro.core.policy.FluidController`) into a per-layer bit
+vector, and the batch's ``(B, n_layers)`` bit *matrix* is an ordinary
+traced input — the TPU realization of the paper's §V.B dynamic
+mixed-precision claim, at request granularity (cf. LRMP,
+arXiv:2312.03146).
 
-Architecture (DESIGN.md §6):
+The queue, EDP-aware admission scheduler, slot lifecycle, closed
+control loop, pricing, and stats all live in the workload-agnostic
+:class:`repro.serve.runtime.ServeRuntime` (DESIGN.md §8); this module
+owns only what is LM-shaped — ragged prefill, the scan-fused decode
+block, per-row sampling, and the KV cache pool.
 
-  * ``submit()`` enqueues requests (prompt, latency budget, sampling
-    params); a scheduler admits them into free slots of a persistent
-    :class:`repro.models.lm.CachePool` as earlier requests complete
-    (continuous batching — no batch barrier).
   * prefill runs per admitted request on a fixed ``(1, prefill_len)``
     shape (right-padded, EMPTY_POS-masked), its cache row installed into
-    the pool by a traced-index write — slot churn never retraces.
+    a persistent :class:`repro.models.lm.CachePool` by a traced-index
+    write — slot churn never retraces.
   * decode is scan-fused: ``decode_block`` tokens per dispatch via
     ``lax.scan`` over (decode_step -> sample), with per-row positions,
     per-row bits, and per-row sampling (greedy / temperature / top-k).
-  * ``ServeStats`` counts traces; tests assert both programs compile
-    exactly once across budget changes, slot reuse, and admission churn.
+  * ``stats`` counts traces; tests assert both programs compile exactly
+    once across budget churn, slot reuse, and closed-loop switches.
 
-The legacy whole-batch API (``set_budget``/``generate``) is kept — it now
-accepts a per-request budget *vector* and runs the same scan-fused decode
-(``fused=False`` preserves the old per-token Python loop for the
+The legacy whole-batch API (``set_budget``/``generate``) is kept — it
+accepts a per-request budget *vector* and runs the same scan-fused
+decode (``fused=False`` preserves the per-token Python loop for the
 benchmark baseline in benchmarks/serve_throughput.py).
 """
 from __future__ import annotations
 
-import collections
-import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -43,23 +42,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import dist
-from repro.apsim import metrics as apm
-from repro.core.policy import BudgetController, PrecisionPolicy
+from repro.core.policy import (BudgetController, FluidController,
+                               PrecisionPolicy)
 from repro.dist import sharding as shd
-from repro.kernels import ops as kops
 from repro.models import lm
+from repro.serve.accounting import RequestStats, RuntimeStats  # noqa: F401
+from repro.serve.runtime import (ServeRuntime, SlotTable,
+                                 UNCONSTRAINED_BUDGET)
 
 TOPK_MAX = 64          # static top-k sort width; per-row k <= TOPK_MAX
-
-
-@dataclasses.dataclass
-class ServeStats:
-    """Engine-wide counters; trace counts prove zero-retrace serving."""
-    prefill_traces: int = 0
-    decode_traces: int = 0
-    tokens: int = 0
-    admitted: int = 0
-    completed: int = 0
 
 
 @dataclasses.dataclass
@@ -68,67 +59,10 @@ class Request:
     rid: int
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int
-    budget_s: float
+    budget_s: Optional[float]
     temperature: float = 0.0
     top_k: int = 0
     prefix: Optional[np.ndarray] = None  # vlm: (n_prefix_tokens, d) stub
-
-
-@dataclasses.dataclass
-class RequestStats:
-    """Per-request serving record (the per-request half of ServeStats).
-
-    Besides wall-clock timing, each request carries its *priced* AP cost:
-    at admission the resolved per-layer bit vector is pushed through
-    ``apsim.metrics.price_bit_vector`` (the paper's calibrated cycle/energy
-    model), so every request reports the latency/energy/EDP it would cost
-    on the BF-IMNA hardware at its own precision — the Table 7
-    accuracy-vs-EDP trade-off, live per request."""
-    rid: int
-    prompt_len: int
-    budget_s: float
-    mean_wbits: float                   # realized per-layer weight bits
-    slot: int = -1
-    tokens: List[int] = dataclasses.field(default_factory=list)
-    submitted_s: float = 0.0
-    finished_s: float = 0.0
-    done: bool = False
-    ap_cycles_per_token: float = 0.0
-    ap_energy_per_token_j: float = 0.0
-    ap_cost: Optional[apm.BitVectorCost] = None   # per-layer breakdown
-
-    @property
-    def n_tokens(self) -> int:
-        return len(self.tokens)
-
-    @property
-    def processed_tokens(self) -> int:
-        """Tokens this request pushed through the model (prompt + new)."""
-        return self.prompt_len + self.n_tokens
-
-    @property
-    def latency_s(self) -> float:
-        """Wall-clock submit-to-finish latency (0.0 until done)."""
-        return max(self.finished_s - self.submitted_s, 0.0) if self.done \
-            else 0.0
-
-    @property
-    def ap_latency_s(self) -> float:
-        """Modeled AP latency for every processed token at this request's
-        precision configuration."""
-        if self.ap_cost is None:
-            return 0.0
-        return (self.processed_tokens * self.ap_cycles_per_token
-                / self.ap_cost.freq_hz)
-
-    @property
-    def ap_energy_j(self) -> float:
-        return self.processed_tokens * self.ap_energy_per_token_j
-
-    @property
-    def edp(self) -> float:
-        """Modeled AP energy-delay product (J·s) of the whole request."""
-        return self.ap_energy_j * self.ap_latency_s
 
 
 def _sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
@@ -151,8 +85,8 @@ def _sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
     return jnp.where(temperature > 0, sampled, greedy)
 
 
-class ServeEngine:
-    """Continuous-batching, bit-fluid serving engine.
+class ServeEngine(ServeRuntime):
+    """Continuous-batching, bit-fluid LM serving engine.
 
     Two APIs share the compiled programs:
 
@@ -170,10 +104,10 @@ class ServeEngine:
                  decode_block: int = 8, eos_id: Optional[int] = None,
                  seed: int = 0):
         self.cfg = cfg
-        self.mesh = mesh if mesh is not None else dist.active_mesh()
-        if self.mesh is not None:       # place serve weights once, sharded
+        mesh = mesh if mesh is not None else dist.active_mesh()
+        if mesh is not None:            # place serve weights once, sharded
             qparams = jax.device_put(
-                qparams, shd.param_shardings(qparams, self.mesh))
+                qparams, shd.param_shardings(qparams, mesh))
         self.qparams = qparams
         self.max_len = max_len
         self.n_slots = n_slots
@@ -181,49 +115,48 @@ class ServeEngine:
         self.decode_block = decode_block
         self.eos_id = eos_id
         n = lm.n_bit_slots(cfg)
-        self.n_layers = n
-        if controller is not None:
-            self.controller = controller
-        else:
+        if controller is None:
             pol = policy or _default_policy()
-            self.controller = BudgetController(
-                {pol.name: pol}, {pol.name: 0.0}, n)
+            controller = BudgetController({pol.name: pol}, {pol.name: 0.0}, n)
+        if (controller.budget_axis != "latency"
+                and not isinstance(controller, FluidController)):
+            # a FluidController may run its SLO loop on the energy/EDP
+            # axis (AP latency is nearly flat across precisions — Table
+            # VII — so only energy-family budgets can discriminate);
+            # request budgets then live on that axis too.  An OPEN-loop
+            # controller on a non-latency axis is a wiring bug: LM
+            # budgets are seconds, so they would always- or never-fit.
+            raise ValueError(
+                f"ServeEngine budgets are LATENCY budgets (seconds) but the "
+                f"controller's prediction table lives on the "
+                f"{controller.budget_axis!r} axis — its budgets would "
+                f"always- or never-fit; build the controller with "
+                f"latency predictions (cnn_budget_controller's "
+                f"energy/EDP axes are for CNNServeEngine, or use a "
+                f"FluidController for an energy/EDP SLO loop)")
+        super().__init__(controller, n, gemms=lm.layer_gemm_dims(cfg),
+                         head=lm.head_gemm_dims(cfg), mesh=mesh)
         self.budget_s = jnp.asarray(1e9, jnp.float32)
-        self.stats = ServeStats()
         self.row_bits = cfg.family in lm.PER_ROW_BIT_FAMILIES
         self._key = jax.random.PRNGKey(seed)
-        # grouped per-row dispatch specializes one GEMM per *distinct*
-        # weight bit-width the controller can emit (kernels/ops.py); the
-        # family set is applied around every compiled call (trace-time)
-        wtab, _ = self.controller.stacked_tables()
-        self._families = tuple(sorted(
-            {min(max(int(v), 1), 8) for v in np.asarray(wtab).ravel()}))
-        # AP pricing of resolved bit vectors (per-request EDP accounting)
-        self._gemms = lm.layer_gemm_dims(cfg)
-        self._head_gemm = lm.head_gemm_dims(cfg)
-        self._price_cache: Dict[bytes, apm.BitVectorCost] = {}
 
         # ---- continuous-batching state (pool built lazily on first submit)
         self.pool: Optional[lm.CachePool] = None
-        self._queue: "collections.deque[Request]" = collections.deque()
-        self._next_rid = 0
-        self.requests: Dict[int, RequestStats] = {}
-        self._slot_req = np.full((n_slots,), -1, np.int64)   # slot -> rid
-        self._tok = np.zeros((n_slots,), np.int64)
-        self._t = np.zeros((n_slots,), np.int64)
-        self._budget = np.full((n_slots,), 1e9, np.float64)
-        self._temp = np.zeros((n_slots,), np.float64)
-        self._topk = np.zeros((n_slots,), np.int64)
-        self._remaining = np.zeros((n_slots,), np.int64)
+        self.slots = SlotTable(
+            n_slots,
+            tok=(np.int64, 0), t=(np.int64, 0),
+            budget=(np.float64, 0.0),           # freed rows: cheapest bits
+            temp=(np.float64, 0.0), topk=(np.int64, 0),
+            remaining=(np.int64, 0))
         self._just_finished: List[int] = []
 
         # ---- compiled programs (each traces exactly once per shape)
         def _prefill_batch(q, batch, cache, wv, av):
-            self.stats.prefill_traces += 1
+            self.stats.trace("prefill")
             return lm.prefill(q, batch, cfg, wv, av, cache)
 
         def _prefill_row(q, tokens, length, wv, av, *prefix):
-            self.stats.prefill_traces += 1
+            self.stats.trace("prefill")
             cache = lm.empty_cache(cfg, 1, max_len)
             batch = {"tokens": tokens}
             if prefix:                  # vlm: (1, n_prefix_tokens, d)
@@ -231,7 +164,7 @@ class ServeEngine:
             return lm.prefill(q, batch, cfg, wv, av, cache, lengths=length)
 
         def _decode_scan(q, tok, t, cache, wv, av, temp, topk, keys):
-            self.stats.decode_traces += 1
+            self.stats.trace("decode")
 
             def step(carry, key):
                 tok, t, cache = carry
@@ -244,7 +177,7 @@ class ServeEngine:
 
         def _decode_one(q, tok, t, cache, wv, av, temp, topk, key):
             # per-token baseline (benchmarks) — same math, no scan fusion
-            self.stats.decode_traces += 1
+            self.stats.trace("decode")
             logits, cache = lm.decode_step(q, tok, t, cache, cfg, wv, av)
             nxt = _sample_tokens(logits[:, -1], key, temp, topk)
             return nxt[:, None], t + 1, cache, nxt
@@ -276,32 +209,10 @@ class ServeEngine:
                 f"(supported: {lm.PER_ROW_BIT_FAMILIES})")
         return wv, av
 
-    @contextlib.contextmanager
-    def _compute_ctx(self):
-        """Mesh placement + the controller's static bit-family set (both
-        trace-time properties of the engine's compiled programs)."""
-        mesh_ctx = (dist.use_mesh(self.mesh) if self.mesh is not None
-                    else contextlib.nullcontext())
-        with mesh_ctx, kops.bit_families(self._families):
-            yield
-
-    def price_bits(self, wv, av) -> apm.BitVectorCost:
-        """AP cycles/energy of one resolved (n_layers,) bit vector pair
-        (cached — the controller emits a small static set of vectors)."""
-        wv = np.asarray(wv, np.int64)
-        av = np.asarray(av, np.int64)
-        key = wv.tobytes() + b"|" + av.tobytes()
-        hit = self._price_cache.get(key)
-        if hit is None:
-            hit = apm.price_bit_vector(self._gemms, wv.tolist(), av.tolist(),
-                                       head=self._head_gemm)
-            self._price_cache[key] = hit
-        return hit
-
-    def price_budget(self, budget_s: float) -> apm.BitVectorCost:
+    def price_budget(self, budget_s: float):
         """Per-token AP cost of the configuration a scalar budget selects."""
-        wv, av = self.controller.resolve(jnp.asarray(budget_s, jnp.float32))
-        return self.price_bits(wv, av)
+        return self.price_bits(
+            *self.controller.resolve(jnp.asarray(budget_s, jnp.float32)))
 
     def _split_key(self, num: int):
         keys = jax.random.split(self._key, num + 1)
@@ -317,7 +228,14 @@ class ServeEngine:
                  ) -> jnp.ndarray:
         """Generate ``steps`` tokens for one synchronous batch; returns
         (B, steps) ids.  Greedy unless per-row temperature/top_k given."""
-        with self._compute_ctx():
+        if isinstance(self.controller, FluidController):
+            # the whole-batch path has no admissions to charge — it would
+            # silently run the fluid controller open-loop
+            raise ValueError(
+                "the whole-batch generate() API is open-loop; a "
+                "FluidController's SLO window is only charged by the "
+                "continuous scheduler — use submit()/run()")
+        with self.compute_ctx():
             return self._generate(batch, steps, temperature, top_k, fused)
 
     def _generate(self, batch, steps, temperature, top_k, fused):
@@ -365,8 +283,9 @@ class ServeEngine:
     def submit(self, prompt, *, max_new_tokens: int = 16,
                budget_s: Optional[float] = None, temperature: float = 0.0,
                top_k: int = 0, prefix=None) -> int:
-        """Enqueue a request; returns its id.  ``budget_s`` picks this
-        request's precision configuration (None = loosest/most accurate).
+        """Enqueue a request; returns its id.  ``budget_s`` caps this
+        request's precision configuration (None = loosest/most accurate;
+        under a FluidController the closed loop may tighten it further).
         vlm models require ``prefix`` (n_prefix_tokens, d_model)."""
         if self.cfg.family not in lm.RAGGED_PREFILL_FAMILIES:
             raise NotImplementedError(
@@ -396,17 +315,16 @@ class ServeEngine:
                 raise ValueError(f"prefix shape {prefix.shape} != "
                                  f"({self.cfg.n_prefix_tokens}, "
                                  f"{self.cfg.d_model})")
-        budget = float(budget_s) if budget_s is not None else 1e9
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(Request(rid, prompt, max_new_tokens, budget,
-                                   float(temperature), int(top_k),
-                                   prefix=prefix))
-        self.requests[rid] = RequestStats(
-            rid=rid, prompt_len=int(prompt.shape[0]), budget_s=budget,
-            mean_wbits=0.0,             # realized at admission (_admit)
-            submitted_s=time.time())
-        return rid
+        rid = self.next_rid()
+        req = Request(rid, prompt, max_new_tokens,
+                      None if budget_s is None else float(budget_s),
+                      float(temperature), int(top_k), prefix=prefix)
+        record = RequestStats(
+            rid=rid,
+            budget_s=(float(budget_s) if budget_s is not None
+                      else UNCONSTRAINED_BUDGET),
+            prompt_len=int(prompt.shape[0]), submitted_s=time.time())
+        return self.new_record(record, req, budget_s)
 
     def _ensure_pool(self) -> lm.CachePool:
         if self.pool is None:
@@ -419,17 +337,19 @@ class ServeEngine:
         return self.pool
 
     def _admit(self) -> List[int]:
-        """Move queued requests into free pool slots (prefill + install)."""
+        """Move queued requests into free pool slots (prefill + install),
+        in the runtime's EDP-aware, starvation-free admission order."""
         pool = self._ensure_pool()
         admitted = []
-        while self._queue and pool.free_slots:
-            req = self._queue.popleft()
+        while self.queued and pool.free_slots:
+            req: Request = self.next_admission()
             slot = pool.alloc()
             S = req.prompt.shape[0]
+            record = self.requests[req.rid]
+            wv, av = self.admit_record(record, req.budget_s,
+                                       S + req.max_new_tokens)
             tokens = np.zeros((1, self.prefill_len), np.int32)
             tokens[0, :S] = req.prompt
-            wv, av = self.controller.resolve(
-                jnp.asarray(req.budget_s, jnp.float32))
             extra = (() if req.prefix is None
                      else (jnp.asarray(req.prefix[None]),))
             logits, row_cache = self._prefill_row(
@@ -442,108 +362,88 @@ class ServeEngine:
             first = self._sample_first(
                 logits, key, jnp.asarray([req.temperature], jnp.float32),
                 jnp.asarray([req.top_k], jnp.int32))
-            st = self.requests[req.rid]
-            st.slot = slot
-            st.mean_wbits = float(jnp.mean(wv.astype(jnp.float32)))
-            cost = self.price_bits(wv, av)      # AP pricing of this mix
-            st.ap_cost = cost
-            st.ap_cycles_per_token = cost.cycles
-            st.ap_energy_per_token_j = cost.energy_j
-            st.tokens.append(int(first[0]))
+            record.slot = slot
+            record.tokens.append(int(first[0]))
             self.stats.tokens += 1
-            self.stats.admitted += 1
-            self._slot_req[slot] = req.rid
-            self._tok[slot] = int(first[0])
-            self._t[slot] = S + prefix_len
-            self._budget[slot] = req.budget_s
-            self._temp[slot] = req.temperature
-            self._topk[slot] = req.top_k
-            self._remaining[slot] = req.max_new_tokens - 1
+            self.slots.occupy(slot, req.rid, tok=int(first[0]),
+                              t=S + prefix_len, budget=record.budget_s,
+                              temp=req.temperature, topk=req.top_k,
+                              remaining=req.max_new_tokens - 1)
             admitted.append(req.rid)
-            if self._remaining[slot] <= 0 or (
+            if self.slots["remaining"][slot] <= 0 or (
                     self.eos_id is not None
                     and int(first[0]) == self.eos_id):
                 self._finish(slot)
         return admitted
 
     def _finish(self, slot: int) -> None:
-        rid = int(self._slot_req[slot])
-        st = self.requests[rid]
-        st.done = True
-        st.finished_s = time.time()
-        self.stats.completed += 1
-        self._slot_req[slot] = -1
-        self._remaining[slot] = 0
+        rid = int(self.slots.rid[slot])
+        self.finish_record(rid)
+        self.slots.release(slot)
         self.pool.free(slot)
         self._just_finished.append(rid)
+
+    def _has_active(self) -> bool:
+        return bool(self.slots.active.any())
+
+    def _can_admit(self) -> bool:
+        return self.n_slots >= 1
 
     def step(self) -> List[int]:
         """One scheduler tick: admit into free slots, decode one block,
         harvest tokens, retire finished requests.  Returns the rids that
         completed during this tick."""
-        with self._compute_ctx():
+        with self.compute_ctx():
             return self._step()
 
     def _step(self) -> List[int]:
+        self.age_queue()
         self._admit()
         pool = self.pool
-        active = self._slot_req >= 0
+        slots = self.slots
+        active = slots.active
         if not active.any():
             done = self._just_finished
             self._just_finished = []
             return done
         # submit() guarantees a RAGGED_PREFILL_FAMILIES family, all of
         # which support per-row bits — so budgets are always per-slot
-        budgets = jnp.asarray(self._budget, jnp.float32)          # (B,)
+        # (effective budgets were frozen at admission: a request's
+        # configuration is stable for its lifetime even under the
+        # closed-loop controller)
+        budgets = shd.shard_budgets(
+            jnp.asarray(slots["budget"], jnp.float32), self.mesh)   # (B,)
         wv, av = self.controller.resolve(budgets)
         if self.mesh is not None:
             wv, av = shd.shard_bits(wv, self.mesh), shd.shard_bits(av,
                                                                    self.mesh)
         keys = self._split_key(self.decode_block)
-        tok = jnp.asarray(self._tok[:, None], jnp.int32)
-        t = jnp.asarray(self._t, jnp.int32)
-        temp = jnp.asarray(self._temp, jnp.float32)
-        topk = jnp.asarray(self._topk, jnp.int32)
+        tok = jnp.asarray(slots["tok"][:, None], jnp.int32)
+        t = jnp.asarray(slots["t"], jnp.int32)
+        temp = jnp.asarray(slots["temp"], jnp.float32)
+        topk = jnp.asarray(slots["topk"], jnp.int32)
         tok, t, pool.cache, toks = self._decode_scan(
             self.qparams, tok, t, pool.cache, wv, av, temp, topk, keys)
         toks_h = np.asarray(toks)
-        self._tok = np.asarray(tok)[:, 0].astype(np.int64)
-        self._t += self.decode_block
+        slots["tok"][:] = np.asarray(tok)[:, 0].astype(np.int64)
+        slots["t"][:] += self.decode_block
         for slot in np.nonzero(active)[0]:
-            rid = int(self._slot_req[slot])
+            rid = int(slots.rid[slot])
             st = self.requests[rid]
-            take = int(min(self._remaining[slot], self.decode_block))
+            take = int(min(slots["remaining"][slot], self.decode_block))
             new = toks_h[slot, :take].tolist()
             if self.eos_id is not None and self.eos_id in new:
                 new = new[:new.index(self.eos_id) + 1]
             st.tokens.extend(int(x) for x in new)
             self.stats.tokens += len(new)
-            self._remaining[slot] -= take
+            slots["remaining"][slot] -= take
             hit_eos = (self.eos_id is not None and new
                        and new[-1] == self.eos_id)
-            if self._remaining[slot] <= 0 or hit_eos:
+            if slots["remaining"][slot] <= 0 or hit_eos:
                 self._finish(slot)
         done = self._just_finished
         self._just_finished = []
         return done
-
-    def run(self, max_ticks: int = 10_000) -> Dict[int, RequestStats]:
-        """Pump the scheduler until every submitted request completes;
-        returns {rid: RequestStats}.  Raises if the queue cannot drain
-        (no slots, or max_ticks exhausted) rather than silently returning
-        incomplete results."""
-        for _ in range(max_ticks):
-            if not self._queue and not (self._slot_req >= 0).any():
-                return dict(self.requests)
-            if self._queue and self.n_slots < 1:
-                raise RuntimeError("engine has no slots; requests can "
-                                   "never be admitted")
-            self.step()
-        pending = [r.rid for r in self.requests.values() if not r.done]
-        if pending:
-            raise RuntimeError(f"run() exhausted {max_ticks} ticks with "
-                               f"requests still pending: {pending}")
-        return dict(self.requests)
 
 
 def _default_policy() -> PrecisionPolicy:

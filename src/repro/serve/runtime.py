@@ -1,0 +1,305 @@
+"""Workload-agnostic serving runtime (DESIGN.md §8).
+
+Everything the LM and CNN engines used to duplicate lives here once:
+
+  * the request queue + admission scheduler — EDP-aware (cheapest
+    modeled EDP admits first, maximizing requests served inside a tight
+    SLO window) with FIFO anti-starvation aging, deterministic;
+  * the closed control loop — when the controller is a
+    :class:`repro.core.policy.FluidController`, every admission's
+    effective budget comes from the *remaining* SLO-window budget and
+    its priced AP cost is charged back (paper §V.B's dynamic switching
+    as a live loop; selection stays the pure-data gather, zero-retrace);
+  * slot/batch lifecycle state (:class:`SlotTable` for slot-pool
+    workloads, :meth:`ServeRuntime.plan_admissions` for batched ones);
+  * trace-counting stats, the per-request cost records, and the cached
+    AP pricer (``serve/accounting.py``);
+  * the compute context: active mesh + the controller's static bit
+    family set applied around every compiled call.
+
+:class:`repro.serve.engine.ServeEngine` (prefill/decode) and
+:class:`repro.serve.cnn.CNNServeEngine` (batched forward) are thin
+workload adapters over this base.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import dist
+from repro.apsim import metrics as apm
+from repro.core.policy import BudgetController, FluidController
+from repro.kernels import ops as kops
+from repro.serve.accounting import (BitVectorPricer, CostRecord,
+                                    RuntimeStats, axis_cost)
+
+# "no budget": fits every configuration on any axis (most accurate wins)
+UNCONSTRAINED_BUDGET = 1e30
+
+
+@dataclasses.dataclass
+class _QueueEntry:
+    """One queued admission: workload payload + scheduling metadata."""
+    rid: int
+    payload: object
+    est_edp: float                      # modeled per-unit EDP (ordering)
+    age: int = 0                        # scheduler ticks spent waiting
+
+
+class SlotTable:
+    """Host-side per-slot scheduler state for slot-pool workloads.
+
+    The slot→request ownership array plus named numpy columns (decode
+    position, sampling params, countdowns, ...).  The runtime owns the
+    occupy/release lifecycle; workload adapters read and write columns.
+    """
+
+    def __init__(self, n_slots: int,
+                 **columns: Tuple[type, float]) -> None:
+        self.n_slots = n_slots
+        self.rid = np.full((n_slots,), -1, np.int64)
+        self._fill = {name: fill for name, (_, fill) in columns.items()}
+        self.cols: Dict[str, np.ndarray] = {
+            name: np.full((n_slots,), fill, dtype)
+            for name, (dtype, fill) in columns.items()}
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.cols[name]
+
+    @property
+    def active(self) -> np.ndarray:
+        return self.rid >= 0
+
+    def occupy(self, slot: int, rid: int, **values) -> None:
+        self.rid[slot] = rid
+        for name, v in values.items():
+            self.cols[name][slot] = v
+
+    def release(self, slot: int) -> None:
+        """Free a slot; columns reset to their fills (a freed row decodes
+        masked garbage — its reset budget resolves the cheapest config)."""
+        self.rid[slot] = -1
+        for name, arr in self.cols.items():
+            arr[slot] = self._fill[name]
+
+
+class ServeRuntime:
+    """Shared serving base: queue, scheduler, accounting, control loop."""
+
+    def __init__(self, controller: BudgetController, n_layers: int, *,
+                 gemms: Optional[Sequence[Sequence]] = None,
+                 head: Optional[Tuple[int, int]] = None,
+                 mesh=None, starvation_ticks: int = 8,
+                 slot_desc: str = "bit-slot layers") -> None:
+        if controller.n_layers != n_layers:
+            raise ValueError(
+                f"controller resolves {controller.n_layers} bit slots but "
+                f"this workload has {n_layers} {slot_desc}")
+        self.controller = controller
+        # resolve the ambient mesh here so every adapter behaves the
+        # same inside a `dist.use_mesh(...)` context (shard_budgets et
+        # al. would otherwise fall back to it while the engine's guards
+        # think there is no mesh — half-sharded inputs)
+        self.mesh = mesh if mesh is not None else dist.active_mesh()
+        self.n_layers = n_layers
+        self.starvation_ticks = starvation_ticks
+        # grouped per-row dispatch specializes one GEMM per *distinct*
+        # weight bit-width the controller can emit (kernels/ops.py); the
+        # family set is applied around every compiled call (trace-time)
+        wtab, _ = controller.stacked_tables()
+        self._families = tuple(sorted(
+            {min(max(int(v), 1), 8) for v in np.asarray(wtab).ravel()}))
+        self.pricer = (BitVectorPricer(gemms, head=head)
+                       if gemms is not None else None)
+        self.stats = RuntimeStats()
+        self.requests: Dict[int, CostRecord] = {}
+        self._next_rid = 0
+        self._pending: List[_QueueEntry] = []
+        self._config_costs: Optional[List[apm.BitVectorCost]] = None
+        self._lats_np: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    # Pricing / control loop
+    # ------------------------------------------------------------------
+
+    def price_bits(self, wv, av) -> apm.BitVectorCost:
+        """AP cycles/energy of one resolved bit vector pair (cached)."""
+        return self.pricer.price(wv, av)
+
+    def _host_index(self, budget: float) -> int:
+        """Host-side mirror of ``controller.select`` for one budget
+        (prediction array cached as numpy — this runs per admission)."""
+        if self._lats_np is None:
+            self._lats_np = np.asarray(self.controller.latency_array(),
+                                       np.float32)
+        fits = np.nonzero(self._lats_np <= np.float32(budget))[0]
+        return int(fits[-1]) if fits.size else 0
+
+    def _config_cost(self, idx: int) -> apm.BitVectorCost:
+        """Priced AP cost of the controller's idx-th stacked config."""
+        if self._config_costs is None:
+            wtab, atab = self.controller.stacked_tables()
+            wtab, atab = np.asarray(wtab), np.asarray(atab)
+            self._config_costs = [self.pricer.price(wtab[i], atab[i])
+                                  for i in range(wtab.shape[0])]
+        return self._config_costs[idx]
+
+    def admission_budget(self, requested: Optional[float] = None) -> float:
+        """Effective budget for the next admission: closed-loop headroom
+        under a FluidController, the request's own budget otherwise."""
+        if isinstance(self.controller, FluidController):
+            return self.controller.admission_budget(requested)
+        return (float(requested) if requested is not None
+                else UNCONSTRAINED_BUDGET)
+
+    def charge(self, cost: apm.BitVectorCost, units: int = 1) -> None:
+        """Feed one admission's priced cost back into the control loop."""
+        if isinstance(self.controller, FluidController):
+            self.controller.charge(
+                axis_cost(cost, self.controller.budget_axis, units))
+
+    def admit_record(self, record: CostRecord,
+                     requested: Optional[float], units: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Resolve one admission end to end: effective budget → bit
+        vectors (pure-data gather) → AP pricing → control-loop charge.
+        ``units`` is the admission's *planned* AP unit count (LM: prompt
+        + max new tokens; CNN: 1)."""
+        eff = self.admission_budget(requested)
+        wv, av = self.controller.resolve(jnp.asarray(eff, jnp.float32))
+        cost = self.price_bits(wv, av)
+        record.budget_s = eff
+        record.ap_cost = cost
+        record.mean_wbits = float(np.mean(np.asarray(wv, np.float64)))
+        record.planned_units = units
+        self.charge(cost, units)
+        self.stats.admitted += 1
+        return wv, av
+
+    def plan_admissions(self, budgets: Sequence[Optional[float]],
+                        units: int = 1) -> np.ndarray:
+        """Batch admission planning (the batched-forward lifecycle):
+        each admission is charged at its selected config's priced cost
+        *before* the next one's headroom is computed, so a closed-loop
+        controller adapts within the batch.  Open-loop budgets pass
+        through unchanged.  Returns effective budgets — pure data for
+        ``controller.resolve``."""
+        fluid = isinstance(self.controller, FluidController)
+        eff = np.empty((len(budgets),), np.float64)
+        for i, b in enumerate(budgets):
+            e = self.admission_budget(b)
+            if fluid:
+                self.charge(self._config_cost(self._host_index(e)), units)
+            eff[i] = e
+        return eff
+
+    # ------------------------------------------------------------------
+    # Queue + admission scheduler
+    # ------------------------------------------------------------------
+
+    def new_record(self, record: CostRecord, payload: object,
+                   requested: Optional[float]) -> int:
+        """Register a submitted request and enqueue it for admission."""
+        self.requests[record.rid] = record
+        est = 0.0
+        if self.pricer is not None:
+            open_budget = (float(requested) if requested is not None
+                           else UNCONSTRAINED_BUDGET)
+            est = self._config_cost(self._host_index(open_budget)).edp
+        self._pending.append(_QueueEntry(record.rid, payload, est))
+        return record.rid
+
+    def next_rid(self) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
+
+    @property
+    def queued(self) -> int:
+        return len(self._pending)
+
+    def age_queue(self) -> None:
+        """One scheduler tick of waiting for everything still queued."""
+        for e in self._pending:
+            e.age += 1
+
+    def next_admission(self) -> Optional[object]:
+        """EDP-aware admission pick: the queued request with the lowest
+        modeled per-unit EDP admits first (cheap requests maximize how
+        many fit a tight SLO window), EXCEPT that any request that has
+        waited ``starvation_ticks`` scheduler ticks is admitted FIFO
+        first — the ordering never starves.  Deterministic (ties break
+        by rid)."""
+        if not self._pending:
+            return None
+        starved = [e for e in self._pending if e.age >= self.starvation_ticks]
+        pick = (min(starved, key=lambda e: e.rid) if starved
+                else min(self._pending, key=lambda e: (e.est_edp, e.rid)))
+        self._pending.remove(pick)
+        return pick.payload
+
+    def finish_record(self, rid: int) -> CostRecord:
+        record = self.requests[rid]
+        record.done = True
+        record.finished_s = time.time()
+        self.stats.completed += 1
+        # admissions were charged their PLANNED units; a request that
+        # terminated early (eos) refunds the unused share, so the SLO
+        # window tracks the stream's real spend
+        if (isinstance(self.controller, FluidController)
+                and record.ap_cost is not None
+                and record.ap_units != record.planned_units):
+            axis = self.controller.budget_axis
+            self.controller.reconcile(
+                axis_cost(record.ap_cost, axis, record.ap_units)
+                - axis_cost(record.ap_cost, axis, record.planned_units))
+        return record
+
+    # ------------------------------------------------------------------
+    # Scheduler loop (slot-pool workloads)
+    # ------------------------------------------------------------------
+
+    def step(self) -> List[int]:                # pragma: no cover - abstract
+        raise NotImplementedError("workload adapter must implement step()")
+
+    def _has_active(self) -> bool:              # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _can_admit(self) -> bool:
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, CostRecord]:
+        """Pump the scheduler until every submitted request completes;
+        returns {rid: record}.  Raises if the queue cannot drain (no
+        slots, or max_ticks exhausted) rather than silently returning
+        incomplete results."""
+        for _ in range(max_ticks):
+            if not self._pending and not self._has_active():
+                return dict(self.requests)
+            if self._pending and not self._can_admit():
+                raise RuntimeError("engine has no slots; requests can "
+                                   "never be admitted")
+            self.step()
+        still = [r.rid for r in self.requests.values() if not r.done]
+        if still:
+            raise RuntimeError(f"run() exhausted {max_ticks} ticks with "
+                               f"requests still pending: {still}")
+        return dict(self.requests)
+
+    # ------------------------------------------------------------------
+    # Compute context
+    # ------------------------------------------------------------------
+
+    @contextlib.contextmanager
+    def compute_ctx(self):
+        """Mesh placement + the controller's static bit-family set (both
+        trace-time properties of the engine's compiled programs)."""
+        mesh_ctx = (dist.use_mesh(self.mesh) if self.mesh is not None
+                    else contextlib.nullcontext())
+        with mesh_ctx, kops.bit_families(self._families):
+            yield

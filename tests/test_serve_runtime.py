@@ -1,0 +1,435 @@
+"""The workload-agnostic serving runtime (DESIGN.md §8): closed-loop
+SLO convergence (deterministic, seed-stable), EDP-aware admission that
+never starves, unified LM+CNN accounting, and one-pass matrix pricing
+— zero-retrace across closed-loop config switches throughout."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.apsim import metrics as apm
+from repro.apsim.workloads import conv, fc, pool
+from repro.core import policy as pol
+from repro.models import common as cm
+from repro.models import lm
+from repro.serve import accounting as acct
+from repro.serve.cnn import CNNServeEngine
+from repro.serve.engine import ServeEngine
+from repro.serve.runtime import SlotTable, UNCONSTRAINED_BUDGET
+
+KEY = jax.random.PRNGKey(7)
+
+# full-LM engines are too slow through interpret-mode Pallas; the
+# control-loop/scheduler/accounting logic is covered there by the pure
+# and tiny-CNN tests below
+INTERP = os.environ.get("REPRO_PALLAS", "").lower() == "interpret"
+heavy = pytest.mark.skipif(INTERP, reason="pure + tiny-CNN tests cover the "
+                                          "runtime under interpret Pallas")
+
+PROMPT = [3, 1, 4, 1]
+MAX_NEW = 4
+UNITS = len(PROMPT) + MAX_NEW           # planned AP units per request
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = configs.get_smoke("qwen3_4b")
+    params = lm.init_params(cfg, KEY)
+    qparams = lm.quantize_params(params, cfg)
+    return cfg, qparams, lm.n_bit_slots(cfg)
+
+
+def _ctrl(n, preds=None):
+    return pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        preds or {"int4": 1.0, "int8": 2.0}, n)
+
+
+def _request_costs(served):
+    """Actual modeled per-request AP energy of each config (J).
+
+    Energy, not latency: AP latency is nearly flat across precisions
+    (Table VII — bit-serial columns), so the energy family is the axis a
+    system-level SLO can meaningfully constrain; the LM closed-loop
+    tests run their FluidController there."""
+    cfg, qparams, n = served
+    eng = ServeEngine(cfg, qparams, max_len=64, controller=_ctrl(n))
+    return (UNITS * eng.price_budget(1.0).energy_j,
+            UNITS * eng.price_budget(10.0).energy_j)
+
+
+# ---------------------------------------------------------------------------
+# FluidController math (pure, runs everywhere)
+# ---------------------------------------------------------------------------
+
+def test_fluid_controller_headroom_charge_and_rollover():
+    c = pol.FluidController({"int8": pol.fixed(8)}, {"int8": 1.0}, 4,
+                            slo=8.0, window=4)
+    assert c.headroom() == pytest.approx(2.0)
+    assert c.admission_budget() == pytest.approx(2.0)
+    assert c.admission_budget(1.5) == pytest.approx(1.5)    # request caps
+    c.charge(5.0)                       # overspend: remaining 3.0 over 3
+    assert c.headroom() == pytest.approx(1.0)
+    c.charge(3.0)
+    assert c.headroom() == pytest.approx(0.0)               # budget gone
+    c.charge(1.0)
+    c.charge(1.0)                       # 4th admission rolls the window
+    assert c.served == 0
+    assert c.spent == pytest.approx(2.0)                    # debt carries
+    c2 = pol.FluidController.from_open_loop(_ctrl(4), slo=4.0, window=2)
+    assert c2.budget_axis == "latency" and c2.n_layers == 4
+    c2.charge(1.0)
+    c2.charge(1.0)                      # underspend: credit expires
+    assert c2.spent == 0.0 and c2.served == 0
+
+
+def test_budget_controller_caches_tables():
+    c = _ctrl(4)
+    w1, a1 = c.stacked_tables()
+    w2, a2 = c.stacked_tables()
+    assert w1 is w2 and a1 is a2        # built once, reused per admission
+    assert c.latency_array() is c.latency_array()
+    assert c.order() == ["int4", "int8"]
+    np.testing.assert_array_equal(np.asarray(c.latency_array()), [1.0, 2.0])
+
+
+def test_slot_table_lifecycle():
+    t = SlotTable(3, budget=(np.float64, 0.0), remaining=(np.int64, 0))
+    assert not t.active.any()
+    t.occupy(1, rid=7, budget=2.5, remaining=4)
+    assert t.rid[1] == 7 and t["budget"][1] == 2.5
+    assert t.active.tolist() == [False, True, False]
+    t.release(1)
+    assert not t.active.any() and t["budget"][1] == 0.0 and t.rid[1] == -1
+
+
+# ---------------------------------------------------------------------------
+# One-pass matrix pricing
+# ---------------------------------------------------------------------------
+
+def _tiny_layers():
+    return [conv("c1", 8, 4, 3, 8), pool("p1", "maxpool", 8, 8, 2, 2),
+            conv("c2", 4, 8, 3, 8), fc("fc", 8 * 4 * 4, 10, relu=False)]
+
+
+def test_price_bit_matrix_matches_per_vector():
+    gemms = apm.network_gemms(_tiny_layers())
+    n = len(gemms)
+    rng = np.random.default_rng(3)
+    wmat = rng.choice([2, 4, 8, 16], size=(6, n))
+    amat = rng.choice([4, 8], size=(6, n))
+    wmat[3] = wmat[0]                   # duplicate row -> shared object
+    amat[3] = amat[0]
+    costs = apm.price_bit_matrix(gemms, wmat, amat)
+    assert len(costs) == 6
+    assert costs[3] is costs[0]
+    for i, c in enumerate(costs):
+        want = apm.price_bit_vector(gemms, wmat[i].tolist(),
+                                    amat[i].tolist())
+        assert c.per_layer_cycles == want.per_layer_cycles
+        assert c.per_layer_energy_j == want.per_layer_energy_j
+
+
+def test_price_bit_matrix_head_and_validation():
+    gemms = ((64, 32),), ((32, 16),)
+    wmat = np.asarray([[4, 8], [8, 2]])
+    costs = apm.price_bit_matrix(gemms, wmat, wmat, head=(16, 100))
+    for i, c in enumerate(costs):
+        want = apm.price_bit_vector(gemms, wmat[i].tolist(),
+                                    wmat[i].tolist(), head=(16, 100))
+        assert c.per_layer_cycles == want.per_layer_cycles   # incl. head
+        assert len(c.per_layer_cycles) == 3
+    with pytest.raises(ValueError, match="bit slots"):
+        apm.price_bit_matrix(gemms, wmat[:, :1], wmat[:, :1])
+    with pytest.raises(ValueError, match="shape"):
+        apm.price_bit_matrix(gemms, wmat, wmat[:1])
+
+
+def test_pricer_cache_identity_across_vector_and_matrix():
+    gemms = apm.network_gemms(_tiny_layers())
+    n = len(gemms)
+    p = acct.BitVectorPricer(gemms)
+    v = np.full((n,), 8, np.int64)
+    one = p.price(v, v)
+    rows = p.price_matrix(np.stack([v, v // 2, v]), np.stack([v, v, v]))
+    assert rows[0] is one and rows[2] is one
+    assert rows[1] is p.price(v // 2, v)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop SLO convergence (the §V.B control loop)
+# ---------------------------------------------------------------------------
+
+def _run_stream(served, controller, n_req, budget_s=None, seed=0):
+    cfg, qparams, _ = served
+    eng = ServeEngine(cfg, qparams, max_len=64, controller=controller,
+                      n_slots=2, prefill_len=8, decode_block=4, seed=seed)
+    rids = [eng.submit(np.asarray(PROMPT), max_new_tokens=MAX_NEW,
+                       budget_s=budget_s) for _ in range(n_req)]
+    res = eng.run()
+    return eng, [res[r] for r in rids]
+
+
+def _energy_fluid(n, preds, *, slo, window):
+    """A FluidController running an ENERGY SLO loop (see _request_costs);
+    with slo=inf it degrades to open-loop behavior on the same axis —
+    the apples-to-apples baseline."""
+    return pol.FluidController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)}, dict(preds), n,
+        budget_axis="energy", slo=slo, window=window)
+
+
+@heavy
+def test_closed_loop_converges_to_slo_and_undercuts_open_loop(served):
+    """A stream of identical requests under a tight SLO: the closed loop
+    ends within one request of the budget and serves strictly lower-bit
+    configs than the open-loop controller under the same load — while
+    both compile exactly once (config switches are pure data)."""
+    _, _, n = served
+    req4, req8 = _request_costs(served)
+    assert req4 < 0.6 * req8            # energy discriminates precisions
+    # optimistic predictions (half the actual cost): the open loop takes
+    # them at face value and overshoots; the closed loop sees the charges
+    preds = {"int4": req4 / 2, "int8": req8 / 2}
+    n_req = 8
+    slo = n_req * preds["int8"] * 1.2           # tight system budget
+
+    open_ctrl = _energy_fluid(n, preds, slo=float("inf"), window=n_req)
+    open_eng, open_recs = _run_stream(served, open_ctrl, n_req,
+                                      budget_s=slo / n_req)
+    fluid = _energy_fluid(n, preds, slo=slo, window=n_req)
+    closed_eng, closed_recs = _run_stream(served, fluid, n_req)
+
+    open_total = sum(r.ap_energy_j for r in open_recs)
+    closed_total = sum(r.ap_energy_j for r in closed_recs)
+    assert open_total > slo * 1.5               # open loop blows the SLO
+    assert abs(closed_total - slo) <= req8      # converges within one req
+    assert closed_total < open_total
+    open_bits = [r.mean_wbits for r in open_recs]
+    closed_bits = [r.mean_wbits for r in closed_recs]
+    assert open_bits == [8.0] * n_req
+    assert np.mean(closed_bits) < np.mean(open_bits)        # strictly lower
+    assert closed_bits[0] == 8.0 and 4.0 in closed_bits     # adapted down
+    # the ledger agrees with the per-request records (window rolled once)
+    assert fluid.spent == pytest.approx(max(closed_total - slo, 0.0))
+    # zero-retrace across every closed-loop switch
+    for eng in (open_eng, closed_eng):
+        assert eng.stats.prefill_traces == 1
+        assert eng.stats.decode_traces == 1
+
+
+@heavy
+def test_closed_loop_refunds_early_termination(served):
+    """Admissions are charged their PLANNED token count so headroom
+    reacts immediately; a request that hits eos early must refund the
+    unused share — the window ledger tracks real spend, not plans."""
+    cfg, qparams, n = served
+    req4, req8 = _request_costs(served)
+    preds = {"int4": req4 / 2, "int8": req8 / 2}
+    slo = 40 * req8                     # generous: config stays int8
+
+    def engine(eos_id=None):
+        fluid = _energy_fluid(n, preds, slo=slo, window=16)
+        return ServeEngine(cfg, qparams, max_len=64, controller=fluid,
+                           n_slots=1, prefill_len=8, decode_block=4,
+                           eos_id=eos_id), fluid
+
+    eng, fluid = engine()
+    rid = eng.submit(np.asarray(PROMPT), max_new_tokens=12)
+    rec = eng.run()[rid]
+    # full-length request: planned == actual, nothing to reconcile
+    assert fluid.spent == pytest.approx(rec.ap_energy_j)
+
+    eng2, fluid2 = engine(eos_id=rec.tokens[1])     # stop within 2 tokens
+    rid2 = eng2.submit(np.asarray(PROMPT), max_new_tokens=12)
+    rec2 = eng2.run()[rid2]
+    assert rec2.n_tokens < 12
+    assert rec2.ap_units < rec2.planned_units
+    assert fluid2.spent == pytest.approx(rec2.ap_energy_j)  # refunded
+
+
+@heavy
+def test_closed_loop_is_deterministic_and_seed_stable(served):
+    _, _, n = served
+    req4, req8 = _request_costs(served)
+    preds = {"int4": req4 / 2, "int8": req8 / 2}
+    slo = 6 * preds["int8"] * 1.2
+
+    def trajectory(seed):
+        fluid = _energy_fluid(n, preds, slo=slo, window=6)
+        eng, recs = _run_stream(served, fluid, 6, seed=seed)
+        return [r.mean_wbits for r in recs], [tuple(r.tokens) for r in recs]
+
+    bits_a, toks_a = trajectory(0)
+    bits_b, toks_b = trajectory(0)
+    assert bits_a == bits_b and toks_a == toks_b    # deterministic replay
+    bits_c, _ = trajectory(99)
+    assert bits_a == bits_c                          # config path is
+    assert len(set(bits_a)) > 1                      # seed-independent
+
+
+# ---------------------------------------------------------------------------
+# EDP-aware admission + anti-starvation
+# ---------------------------------------------------------------------------
+
+@heavy
+def test_admission_prefers_cheapest_edp(served):
+    """With one slot, queued requests admit cheapest-modeled-EDP first
+    (int4 before int8), regardless of submission order."""
+    cfg, qparams, n = served
+    eng = ServeEngine(cfg, qparams, max_len=64, controller=_ctrl(n),
+                      n_slots=1, prefill_len=8, decode_block=4)
+    exp = eng.submit(np.asarray(PROMPT), max_new_tokens=4, budget_s=10.0)
+    cheap = [eng.submit(np.asarray(PROMPT), max_new_tokens=4, budget_s=0.5)
+             for _ in range(2)]
+    done = []
+    while len(done) < 3:
+        done.extend(eng.step())
+    assert done == cheap + [exp]
+    assert eng.stats.prefill_traces == eng.stats.decode_traces == 1
+
+
+@heavy
+def test_scheduler_never_starves(served):
+    """A continuous stream of cheaper arrivals cannot starve an expensive
+    queued request: after `starvation_ticks` scheduler ticks it jumps
+    the EDP ordering and is admitted FIFO."""
+    cfg, qparams, n = served
+    eng = ServeEngine(cfg, qparams, max_len=64, controller=_ctrl(n),
+                      n_slots=1, prefill_len=8, decode_block=4)
+    exp = eng.submit(np.asarray(PROMPT), max_new_tokens=4, budget_s=10.0)
+    eng.submit(np.asarray(PROMPT), max_new_tokens=4, budget_s=0.5)
+    finished_before = 0
+    for tick in range(3 * eng.starvation_ticks):
+        # keep the pressure on: one new cheap request every tick
+        eng.submit(np.asarray(PROMPT), max_new_tokens=4, budget_s=0.5)
+        done = eng.step()
+        if exp in done:
+            break
+        finished_before += len(done)
+    else:
+        pytest.fail("expensive request starved by cheap arrivals")
+    assert finished_before >= 1             # cheap traffic did cut ahead
+    assert tick <= 2 * eng.starvation_ticks
+    assert eng.requests[exp].mean_wbits == 8.0
+
+
+# ---------------------------------------------------------------------------
+# Unified accounting across LM + CNN workloads
+# ---------------------------------------------------------------------------
+
+def _tiny_cnn():
+    layers = _tiny_layers()
+    params = {}
+    keys = jax.random.split(KEY, len(layers))
+    for i, l in enumerate(layers):
+        if l.kind == "conv":
+            fk = l.hk * l.wk * (l.cin // l.groups)
+            params[l.name] = cm.dense_init(keys[i], fk, l.cout, bias=True)
+        elif l.kind == "fc":
+            params[l.name] = cm.dense_init(keys[i], l.cin, l.cout, bias=True)
+    return params, layers
+
+
+def _cnn_edp_ctrl(layers, *, optimistic=1.0):
+    gemms = apm.network_gemms(layers)
+    n = len(gemms)
+    edp4 = apm.price_bit_vector(gemms, [4] * n, [4] * n).edp
+    edp8 = apm.price_bit_vector(gemms, [8] * n, [8] * n).edp
+    return pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": edp4 * optimistic, "int8": edp8 * optimistic},
+        n, budget_axis="edp"), edp4, edp8
+
+
+def test_cnn_closed_loop_adapts_within_batch(rng):
+    """The CNN batch lifecycle charges the fluid controller image by
+    image: under a tight EDP SLO the leading images serve at 8 bits and
+    the tail degrades to 4 — in one compiled forward."""
+    params, layers = _tiny_cnn()
+    ctrl, edp4, edp8 = _cnn_edp_ctrl(layers, optimistic=0.5)
+    B = 6
+    slo = B * edp8 * 0.5 * 1.2
+    fluid = pol.FluidController.from_open_loop(ctrl, slo=slo, window=B)
+    eng = CNNServeEngine(params, layers, controller=fluid, max_batch=B)
+    x = jnp.asarray(rng.normal(size=(B, 8, 8, 4)).astype(np.float32))
+    logits, stats = eng.serve(x)                 # no per-image budgets: SLO
+    assert np.isfinite(logits).all()
+    bits = [s.mean_wbits for s in stats]
+    assert bits[0] == 8.0 and bits[-1] == 4.0
+    assert eng.stats.forward_traces == 1
+    # open loop under the same per-image share never downgrades
+    ctrl2, _, _ = _cnn_edp_ctrl(layers, optimistic=0.5)
+    eng2 = CNNServeEngine(params, layers, controller=ctrl2, max_batch=B)
+    _, stats2 = eng2.serve(x, slo / B)
+    assert [s.mean_wbits for s in stats2] == [8.0] * B
+    assert np.mean(bits) < 8.0
+
+
+@heavy
+def test_mixed_lm_cnn_accounting_sums(served):
+    """One ledger for both workloads: engine-level stats totals equal
+    the sums over per-request records, and records from an LM engine and
+    a CNN engine aggregate together."""
+    cfg, qparams, n = served
+    lm_eng = ServeEngine(cfg, qparams, max_len=64, controller=_ctrl(n),
+                         n_slots=2, prefill_len=8, decode_block=4)
+    for b in (10.0, 0.5, 10.0):
+        lm_eng.submit(np.asarray(PROMPT), max_new_tokens=3, budget_s=b)
+    lm_recs = list(lm_eng.run().values())
+
+    params, layers = _tiny_cnn()
+    ctrl, _, _ = _cnn_edp_ctrl(layers)
+    cnn_eng = CNNServeEngine(params, layers, controller=ctrl, max_batch=4)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 8, 8, 4)).astype(np.float32))
+    _, cnn_recs = cnn_eng.serve(x, [0.0, 1e30, 1e30])
+
+    # engine totals == per-record sums, per workload
+    assert lm_eng.stats.tokens == sum(r.n_tokens for r in lm_recs)
+    assert lm_eng.stats.admitted == lm_eng.stats.completed == len(lm_recs)
+    assert cnn_eng.stats.images == cnn_eng.stats.admitted == len(cnn_recs)
+    assert cnn_eng.requests == {r.rid: r for r in cnn_recs}
+
+    # and the two ledgers merge: aggregate is a plain sum over records
+    agg = acct.aggregate(lm_recs + cnn_recs)
+    assert agg["requests"] == agg["completed"] == 6
+    assert agg["ap_units"] == sum(r.processed_tokens for r in lm_recs) + 3
+    for key, sel in (("ap_latency_s", "ap_latency_s"),
+                     ("ap_energy_j", "ap_energy_j"), ("edp", "edp")):
+        want = (sum(getattr(r, sel) for r in lm_recs)
+                + sum(getattr(r, sel) for r in cnn_recs))
+        assert agg[key] == pytest.approx(want, rel=1e-12)
+        assert agg[key] > 0
+    a_lm = acct.aggregate(lm_recs)
+    a_cnn = acct.aggregate(cnn_recs)
+    assert agg["ap_energy_j"] == pytest.approx(
+        a_lm["ap_energy_j"] + a_cnn["ap_energy_j"], rel=1e-12)
+
+
+def test_serve_engine_rejects_non_latency_controller(served):
+    cfg, qparams, n = served
+    ctrl = pol.BudgetController(
+        {"int8": pol.fixed(8)}, {"int8": 1.0}, n, budget_axis="edp")
+    with pytest.raises(ValueError, match="latency"):
+        ServeEngine(cfg, qparams, max_len=64, controller=ctrl)
+
+
+def test_whole_batch_api_rejects_fluid_controller(served):
+    """generate() has no admissions to charge — running a FluidController
+    through it would silently be open-loop, so it must refuse."""
+    cfg, qparams, n = served
+    fluid = pol.FluidController({"int8": pol.fixed(8)}, {"int8": 1.0}, n,
+                                slo=1.0, window=4)
+    eng = ServeEngine(cfg, qparams, max_len=64, controller=fluid)
+    with pytest.raises(ValueError, match="open-loop"):
+        eng.generate({"tokens": np.zeros((1, 4), np.int32)}, 2)
+
+
+def test_unconstrained_budget_fits_everything():
+    c = _ctrl(4)
+    w, _ = c.resolve(jnp.asarray(UNCONSTRAINED_BUDGET, jnp.float32))
+    assert int(w[0]) == 8

@@ -103,3 +103,17 @@ def test_bits_specs_and_off_mesh_identity():
     assert spec == P(None)
     bits = np.zeros((4,), np.int32)
     assert shd.shard_bits(bits) is bits
+
+
+def test_budgets_spec_and_off_mesh_identity():
+    """Per-request (B,) budget vectors — the runtime's batched admission
+    state — shard over dp like the rows they gate (replication fallback
+    for non-dividing B; identity off-mesh)."""
+    spec = logical_to_mesh(MESH, shd.budgets_pspec(np.zeros((32,))), (32,))
+    assert spec == P("data")
+    spec = logical_to_mesh(MESH, shd.budgets_pspec(np.zeros((30,))), (30,))
+    assert spec == P(None)
+    spec = logical_to_mesh(MESH3, shd.budgets_pspec(np.zeros((32,))), (32,))
+    assert spec == P(("pod", "data"))
+    budgets = np.zeros((8,), np.float32)
+    assert shd.shard_budgets(budgets) is budgets
