@@ -1,0 +1,244 @@
+"""Benchmark regression gate: diff BENCH records against the committed
+baseline (``benchmarks/BENCH_baseline.json``) with per-metric tolerances.
+
+CI runs this *blocking* after the (non-blocking) smoke suite, so a PR
+that silently tanks throughput or SLO attainment fails even though the
+smoke step itself only records.  Rules, by metric name (first match
+wins), applied to each module's curated ``metrics`` dict plus its
+``rc``:
+
+* ``rc`` — HARD: a module that passed at baseline must still pass.
+* ``*attainment*`` — HARD: SLO attainment must not drop at all.
+* relative throughput (``*speedup*`` / ``*geomean*`` /
+  ``*throughput*`` — machine-relative ratios) — HARD: may regress at
+  most 15%.
+* absolute rates (``*_img_s`` / ``*_tok_s``) — reported only: they
+  scale with the runner's hardware, so only their machine-relative
+  ratios (above) gate.
+* ``*traces*`` — HARD: compiled-trace counts are the zero-retrace
+  proof and must match the baseline exactly.
+* ``closed_loop_vs_slo`` — HARD: the closed loop must stay within
+  1.1x of its SLO (the headline acceptance bound), and within 5% of
+  the deterministic baseline value.
+* ``*seconds*`` — reported only (machine-dependent wall time).
+* everything else numeric — WARN (reported, non-blocking) when it
+  moves more than 10%; the traffic metrics are deterministic, so a
+  warn there still deserves a look.
+
+A metric present at baseline but missing now is HARD (the suite lost
+coverage).  New metrics are listed as info.  The delta table is printed
+and, when ``--summary`` (CI passes ``$GITHUB_STEP_SUMMARY``) is given,
+appended there as markdown.
+
+Refresh the baseline after an intentional perf/metric change::
+
+    python -m benchmarks.run --smoke && \
+    PYTHONPATH=src python -m benchmarks.traffic_elasticity && \
+    python -m benchmarks.compare --write-baseline \
+        --current BENCH_smoke.json BENCH_traffic.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from typing import Dict, List, Optional, Tuple
+
+BASELINE = "benchmarks/BENCH_baseline.json"
+
+HARD, WARN, INFO = "HARD", "WARN", "info"
+
+THROUGHPUT_KEYS = ("speedup", "geomean", "throughput")   # relative ratios
+RATE_KEYS = ("_img_s", "_tok_s")        # absolute, machine-dependent
+
+
+def flatten(record: dict) -> Dict[str, float]:
+    """Curated metric leaves of one BENCH record: each module's ``rc``
+    plus every numeric leaf under its ``metrics`` dict (lists index as
+    ``name[i]``); wall-time fields ride along for the report."""
+    out: Dict[str, float] = {}
+
+    def walk(path: str, v) -> None:
+        if isinstance(v, bool):
+            out[path] = float(v)
+        elif isinstance(v, (int, float)):
+            out[path] = float(v)
+        elif isinstance(v, dict):
+            for k, vv in v.items():
+                walk(f"{path}.{k}", vv)
+        elif isinstance(v, (list, tuple)):
+            for i, vv in enumerate(v):
+                walk(f"{path}[{i}]", vv)
+        # None / strings carry no gateable value
+
+    for name, mod in record.get("modules", {}).items():
+        if "rc" in mod:
+            out[f"{name}.rc"] = float(mod["rc"])
+        if "seconds" in mod:
+            out[f"{name}.seconds"] = float(mod["seconds"])
+        walk(f"{name}.metrics", mod.get("metrics", {}))
+    if "total_seconds" in record:
+        out["total_seconds"] = float(record["total_seconds"])
+    return out
+
+
+def classify(path: str) -> str:
+    """Tolerance class for one flattened metric path."""
+    leaf = path.rsplit(".", 1)[-1].lower()
+    if "seconds" in leaf:
+        return "time"
+    if leaf == "rc":
+        return "rc"
+    if "attainment" in leaf:
+        return "attainment"
+    if any(leaf.endswith(k) for k in RATE_KEYS):
+        return "rate"
+    if any(k in leaf for k in THROUGHPUT_KEYS):
+        return "throughput"
+    if "traces" in leaf:
+        return "traces"
+    if leaf.startswith("closed_loop_vs_slo"):
+        return "closed_vs_slo"
+    return "other"
+
+
+def judge(cls: str, base: float, cur: Optional[float]) -> Tuple[str, str]:
+    """(status, note) for one metric; status HARD means the gate fails."""
+    if cur is None:
+        if cls == "time":
+            return INFO, "missing"
+        return HARD, "metric disappeared"
+    if cls in ("time", "rate"):
+        return INFO, ""
+    if cls == "rc":
+        if base == 0 and cur != 0:
+            return HARD, "module now fails"
+        return ("ok", "") if cur == base else (INFO, "rc changed")
+    if cls == "attainment":
+        if cur < base - 1e-9:
+            return HARD, "SLO attainment dropped"
+        return "ok", ""
+    if cls == "throughput":
+        if base > 0 and cur < 0.85 * base:
+            return HARD, f"regressed >15% ({cur / base - 1:+.1%})"
+        return "ok", ""
+    if cls == "traces":
+        if cur != base:
+            return HARD, "trace count changed (retrace?)"
+        return "ok", ""
+    if cls == "closed_vs_slo":
+        if cur > 1.1:
+            return HARD, "closed loop beyond 1.1x SLO"
+        if base > 0 and abs(cur - base) > 0.05 * base:
+            return HARD, "deterministic SLO ratio moved >5%"
+        return "ok", ""
+    # other: deterministic-ish numerics -> warn on drift
+    denom = max(abs(base), 1e-12)
+    if abs(cur - base) > 0.10 * denom:
+        return WARN, f"moved {(cur - base) / denom:+.1%}"
+    return "ok", ""
+
+
+def fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "-"
+    if math.isfinite(v) and v == int(v) and abs(v) < 1e12:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def compare(baseline: dict, currents: List[dict]) -> Tuple[List[dict], int]:
+    """Diff each current record against its suite's baseline record.
+
+    Returns (rows, n_hard).  Every baseline metric produces a row;
+    unflagged rows are summarized, flagged ones make the table.
+    """
+    rows: List[dict] = []
+    n_hard = 0
+    for rec in currents:
+        suite = rec.get("suite", "?")
+        base_rec = baseline.get(suite)
+        if base_rec is None:
+            rows.append({"suite": suite, "path": "(suite)", "base": None,
+                         "cur": None, "status": HARD,
+                         "note": f"suite {suite!r} not in baseline — "
+                                 f"refresh with --write-baseline"})
+            n_hard += 1
+            continue
+        base_flat, cur_flat = flatten(base_rec), flatten(rec)
+        for path, bval in sorted(base_flat.items()):
+            cval = cur_flat.get(path)
+            status, note = judge(classify(path), bval, cval)
+            if status == HARD:
+                n_hard += 1
+            rows.append({"suite": suite, "path": path, "base": bval,
+                         "cur": cval, "status": status, "note": note})
+        for path in sorted(set(cur_flat) - set(base_flat)):
+            rows.append({"suite": suite, "path": path, "base": None,
+                         "cur": cur_flat[path], "status": INFO,
+                         "note": "new metric (not in baseline)"})
+    return rows, n_hard
+
+
+def render(rows: List[dict], n_hard: int) -> str:
+    """Markdown delta table of flagged rows + a one-line verdict."""
+    flagged = [r for r in rows if r["status"] in (HARD, WARN, INFO)
+               and r["note"]]
+    ok_n = sum(1 for r in rows if r["status"] == "ok")
+    lines = ["## Benchmark regression gate", ""]
+    verdict = ("**FAIL** — hard regression(s) vs baseline"
+               if n_hard else "**PASS** — no hard regressions vs baseline")
+    lines.append(f"{verdict}: {ok_n} metrics within tolerance, "
+                 f"{len(flagged)} flagged.")
+    if flagged:
+        lines += ["", "| status | suite | metric | baseline | current | "
+                      "note |", "|---|---|---|---|---|---|"]
+        order = {HARD: 0, WARN: 1, INFO: 2}
+        for r in sorted(flagged, key=lambda r: order[r["status"]]):
+            lines.append(f"| {r['status']} | {r['suite']} | `{r['path']}` "
+                         f"| {fmt(r['base'])} | {fmt(r['cur'])} "
+                         f"| {r['note']} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--current", nargs="+",
+                    default=["BENCH_smoke.json", "BENCH_traffic.json"],
+                    help="BENCH record files produced by this run")
+    ap.add_argument("--summary", default=None,
+                    help="file to APPEND the markdown table to "
+                         "(CI: $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate --baseline from --current instead "
+                         "of comparing")
+    args = ap.parse_args(argv)
+
+    currents = []
+    for path in args.current:
+        with open(path) as f:
+            currents.append(json.load(f))
+
+    if args.write_baseline:
+        merged = {rec.get("suite", f"suite{i}"): rec
+                  for i, rec in enumerate(currents)}
+        with open(args.baseline, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        print(f"[compare] wrote baseline {args.baseline} "
+              f"(suites: {', '.join(sorted(merged))})")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    rows, n_hard = compare(baseline, currents)
+    md = render(rows, n_hard)
+    print(md)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md + "\n")
+    return 1 if n_hard else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,7 +35,8 @@ def main(argv=None) -> int:
     from benchmarks import (calibrate, cnn_serve, fig5_runtimes,
                             fig6_technology, fig7_dse, fig8_breakdown,
                             grouped_dispatch, roofline, serve_runtime,
-                            serve_throughput, table7_bitfluid, table8_sota)
+                            serve_throughput, table7_bitfluid, table8_sota,
+                            traffic_elasticity)
     mods = [
         ("calibrate", calibrate),
         ("fig5_runtimes", fig5_runtimes),
@@ -48,6 +49,7 @@ def main(argv=None) -> int:
         ("grouped_dispatch", grouped_dispatch),
         ("cnn_serve", cnn_serve),
         ("serve_runtime", serve_runtime),
+        ("traffic_elasticity", traffic_elasticity),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))

@@ -1,0 +1,239 @@
+"""The two headline elasticity experiments, run on the trace-driven
+traffic harness (`repro.serve.traffic`, DESIGN.md §9) and persisted as
+``BENCH_traffic.json``.
+
+(a) **Spike response** — a seeded Poisson stream with a systematic 10x
+    burst.  The closed-loop FluidController (deliberately optimistic
+    0.5x predictions, like benchmarks/serve_runtime.py) must hold a
+    tight whole-stream EDP SLO *through the burst* by degrading bits,
+    while the open-loop baseline trusts its table and overshoots.
+(b) **Hourly elasticity** — a diurnal (sinusoid) arrival pattern under a
+    tick-windowed FluidController (a *rate* SLO: EDP per window of
+    scheduler ticks).  Peak phases must serve at lower mean bits than
+    trough phases, which relax back to full precision.
+
+Claims checked (rc != 0 on failure):
+  * spike: closed loop lands within 1.1x of the EDP SLO; open loop
+    overshoots by >= 1.3x; closed-loop SLO attainment >= open loop;
+    closed-loop mean bits strictly below open loop; queue depth peaks
+    during the burst; prefill/decode trace counters stay at 1.
+  * diurnal: peak-phase mean bits < trough-phase mean bits (the loop
+    flexes with load); nothing goes unserved.
+
+Both experiments are fully deterministic (seeded arrivals, tick-based
+latency, analytic EDP), so the regression gate (benchmarks/compare.py)
+can hold their metrics to tight tolerances.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+LAST_RESULTS: dict = {}
+
+SEED = 3
+PROMPT = 8
+MAX_NEW = 8
+ARCH = "qwen3_4b"
+
+
+def _engine(cfg, qparams, controller, n_slots):
+    from repro.serve.engine import ServeEngine
+
+    return ServeEngine(cfg, qparams, max_len=64, controller=controller,
+                       n_slots=n_slots, prefill_len=PROMPT,
+                       decode_block=MAX_NEW)
+
+
+def _replay(trace, eng, use_budgets):
+    from repro.serve import traffic as tf
+
+    res = tf.TraceReplayer(trace, {ARCH: eng},
+                           use_budgets=use_budgets).replay()
+    return res
+
+
+def spike_response(cfg, qparams, n, cfgs, preds, actual, *, full):
+    """(a): does the closed loop hold the EDP SLO through a 10x burst?"""
+    from repro.core import policy as pol
+    from repro.serve import traffic as tf
+
+    import numpy as np
+
+    ticks, rate = (72, 1.5) if full else (24, 0.8)
+    burst_at, burst_len = ticks // 3, max(ticks // 8, 3)
+    kw = dict(ticks=ticks, rate=rate, seed=SEED, burst_mag=10.0,
+              burst_at=burst_at, burst_len=burst_len, prompt_len=PROMPT,
+              max_new_tokens=MAX_NEW)
+    probe = tf.synth_trace("spike", **kw)
+    n_req = probe.n_requests
+    # prompt lengths vary per request and EDP scales with units^2, so the
+    # whole-stream SLO prices the trace's ACTUAL planned token counts
+    units = np.asarray([
+        len(tf.payload_tokens(probe, r, cfg.vocab_size)) + r.max_new_tokens
+        for r in probe.requests], np.float64)
+    scale = float(np.sum((units / (PROMPT + MAX_NEW)) ** 2))
+    slo = preds["int8"] * 1.2 * scale           # tight whole-stream budget
+    # per-request SLO metadata = the flat fair share (attainment
+    # accounting); per-request BUDGET = what the optimistic table says an
+    # int8 request costs, padded 1.2x — the open loop trusts it blindly
+    trace = tf.synth_trace("spike", slo_edp=slo / n_req,
+                           budget=[preds["int8"] * 1.2], **kw)
+
+    def fluid(slo_):
+        return pol.FluidController(cfgs, dict(preds), n, budget_axis="edp",
+                                   slo=slo_, window=n_req)
+
+    open_eng = _engine(cfg, qparams, fluid(float("inf")), n_slots=8)
+    open_rep = _replay(trace, open_eng, use_budgets=True).report(window=6)
+    closed_eng = _engine(cfg, qparams, fluid(slo), n_slots=8)
+    closed_rep = _replay(trace, closed_eng, use_budgets=False).report(window=6)
+
+    open_x = open_rep["total_edp_js"] / slo
+    closed_x = closed_rep["total_edp_js"] / slo
+    traces = [open_eng.stats.prefill_traces, open_eng.stats.decode_traces,
+              closed_eng.stats.prefill_traces,
+              closed_eng.stats.decode_traces]
+    base_q = max(closed_rep["queue_depth"]["series"][:burst_at] or [0])
+    burst_q = closed_rep["queue_depth"]["peak"]
+
+    print(f"spike: {n_req} requests over {ticks} ticks, 10x burst "
+          f"@[{burst_at}, {burst_at + burst_len}), EDP SLO {slo:.3e} J*s")
+    print(f"  open loop  : {open_x:5.2f}x SLO, mean_wbits="
+          f"{open_rep['mean_wbits']:.2f}, attainment="
+          f"{open_rep['slo_attainment']}")
+    print(f"  closed loop: {closed_x:5.2f}x SLO, mean_wbits="
+          f"{closed_rep['mean_wbits']:.2f}, attainment="
+          f"{closed_rep['slo_attainment']}, p50/p99 latency "
+          f"{closed_rep['p50_latency_ticks']:.0f}/"
+          f"{closed_rep['p99_latency_ticks']:.0f} ticks, queue peak "
+          f"{burst_q} (pre-burst {base_q})")
+    print(f"  bits/window: {closed_rep['mean_wbits_per_window']}")
+
+    ok = (closed_x <= 1.1
+          and open_x >= 1.3
+          and closed_rep["slo_attainment"] >= open_rep["slo_attainment"]
+          and closed_rep["mean_wbits"] < open_rep["mean_wbits"]
+          and burst_q > base_q
+          and closed_rep["unserved"] == 0
+          and traces == [1, 1, 1, 1])
+    metrics = {
+        "n_requests": n_req, "ticks": ticks, "burst_mag": 10.0,
+        "slo_edp_js": slo,
+        "open_loop_vs_slo": round(open_x, 4),
+        "closed_loop_vs_slo": round(closed_x, 4),
+        "open_slo_attainment": open_rep["slo_attainment"],
+        "closed_slo_attainment": closed_rep["slo_attainment"],
+        "open_mean_wbits": open_rep["mean_wbits"],
+        "closed_mean_wbits": closed_rep["mean_wbits"],
+        "closed_p50_latency_ticks": closed_rep["p50_latency_ticks"],
+        "closed_p99_latency_ticks": closed_rep["p99_latency_ticks"],
+        "queue_peak": burst_q, "queue_prespike_peak": base_q,
+        "traces": traces,
+    }
+    detail = {"metrics": metrics, "open": open_rep, "closed": closed_rep}
+    return ok, metrics, detail
+
+
+def hourly_elasticity(cfg, qparams, n, cfgs, actual, *, full):
+    """(b): diurnal load under a rate SLO — bits flex with the phase."""
+    from repro.core import policy as pol
+    from repro.serve import traffic as tf
+
+    ticks, rate, window_ticks = (96, 2.0, 12) if full else (48, 1.0, 6)
+    phase = ticks // 4                          # rise / peak / fall / trough
+    trace = tf.synth_trace("diurnal", ticks=ticks, rate=rate, seed=SEED + 2,
+                           depth=0.9, prompt_len=PROMPT,
+                           max_new_tokens=MAX_NEW)
+    # rate SLO: 0.75x of what serving the MEAN arrival rate at int8 costs
+    # per window — tight at peak (rate*1.9), loose at trough (rate*0.1)
+    slo = window_ticks * rate * actual["int8"] * 0.75
+    fluid = pol.FluidController(cfgs, dict(actual), n, budget_axis="edp",
+                                slo=slo, window_ticks=window_ticks)
+    eng = _engine(cfg, qparams, fluid, n_slots=8)
+    rep = _replay(trace, eng, use_budgets=False).report(window=phase)
+
+    bits = rep["mean_wbits_per_window"][:4]
+    arrivals = rep["arrivals_per_window"][:4]
+    peak_bits = bits[1] if bits[1] is not None else 8.0
+    trough_bits = bits[3] if bits[3] is not None else 8.0
+    print(f"diurnal: {trace.n_requests} requests over {ticks} ticks, rate "
+          f"SLO {slo:.3e} J*s per {window_ticks} ticks")
+    print(f"  arrivals/phase: {arrivals}")
+    print(f"  bits/phase    : {bits} (peak {peak_bits} vs trough "
+          f"{trough_bits})")
+    print(f"  unserved={rep['unserved']}, queue peak "
+          f"{rep['queue_depth']['peak']}, overall mean_wbits="
+          f"{rep['mean_wbits']:.2f}")
+
+    ok = (peak_bits < trough_bits
+          and trough_bits == 8.0
+          and rep["unserved"] == 0
+          and arrivals[1] > arrivals[3]
+          and eng.stats.prefill_traces == eng.stats.decode_traces == 1)
+    metrics = {
+        "n_requests": trace.n_requests, "ticks": ticks,
+        "slo_edp_js_per_window": slo, "window_ticks": window_ticks,
+        "arrivals_per_phase": arrivals,
+        "mean_wbits_per_phase": bits,
+        "peak_phase_wbits": peak_bits, "trough_phase_wbits": trough_bits,
+        "mean_wbits": rep["mean_wbits"],
+        "queue_peak": rep["queue_depth"]["peak"],
+        "unserved": rep["unserved"],
+    }
+    return ok, metrics, {"metrics": metrics, "closed": rep}
+
+
+def main(full: bool = False, out: str = "BENCH_traffic.json") -> int:
+    import jax
+
+    from repro import configs
+    from repro.core import policy as pol
+    from repro.models import lm
+    from repro.serve import predict_table
+
+    t0 = time.time()
+    cfg = configs.get_smoke(ARCH)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = lm.quantize_params(params, cfg)
+    n = lm.n_bit_slots(cfg)
+    cfgs = {"int4": pol.fixed(4), "int8": pol.fixed(8)}
+    actual = predict_table(lm.layer_gemm_dims(cfg), cfgs, axis="edp",
+                           units=PROMPT + MAX_NEW,
+                           head=lm.head_gemm_dims(cfg))
+    preds = {k: v / 2 for k, v in actual.items()}   # optimistic table
+
+    ok_a, m_a, d_a = spike_response(cfg, qparams, n, cfgs, preds, actual,
+                                    full=full)
+    ok_b, m_b, d_b = hourly_elasticity(cfg, qparams, n, cfgs, actual,
+                                       full=full)
+
+    record = {
+        "suite": "traffic" + ("-full" if full else "-smoke"),
+        "total_seconds": round(time.time() - t0, 3),
+        "modules": {
+            "spike_response": {"rc": 0 if ok_a else 1, **d_a},
+            "hourly_elasticity": {"rc": 0 if ok_b else 1, **d_b},
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[traffic] wrote {out}")
+
+    LAST_RESULTS.clear()
+    LAST_RESULTS.update({"spike_response": m_a, "hourly_elasticity": m_b})
+    ok = ok_a and ok_b
+    print(f"claims (closed loop holds EDP SLO through 10x spike; bits flex "
+          f"with diurnal phase): {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size traces (nightly); default smoke sizes")
+    ap.add_argument("--out", default="BENCH_traffic.json")
+    args = ap.parse_args()
+    raise SystemExit(main(full=args.full, out=args.out))

@@ -1,0 +1,153 @@
+"""Replay a synthesized traffic trace through one bit-fluid LM server.
+
+The CLI front end of the trace-driven traffic harness (DESIGN.md §9):
+synthesize a seeded arrival schedule (``--trace poisson | diurnal |
+spike``), register every arrival with ``ServeRuntime.submit_at`` (the
+runtime enqueues it when its scheduler clock reaches the arrival tick —
+never all-up-front), pump ``run()``, and print the collector's report:
+SLO attainment, p50/p99 latency (scheduler ticks) and EDP, queue depth
+over time, unserved counts, and mean resolved bits per window.
+
+By default the engine runs the closed loop: a FluidController with
+deliberately optimistic predictions (``--optimism 0.5``) under a tight
+whole-stream EDP SLO (``--slo-x`` times the predicted int8 cost), so a
+spike trace visibly degrades bits mid-burst.  ``--open`` serves the same
+trace open-loop for comparison; ``--window-ticks N`` switches to a rate
+SLO (budget per N scheduler ticks — the diurnal experiment's shape).
+
+  PYTHONPATH=src python launch/serve.py --trace spike --ticks 24 --rate 0.8
+  PYTHONPATH=src python launch/serve.py --trace diurnal --window-ticks 6
+  PYTHONPATH=src python launch/serve.py --trace poisson --open --out rep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.core import policy as pol
+from repro.models import lm
+from repro.serve import predict_table
+from repro.serve import traffic as tf
+from repro.serve.engine import ServeEngine
+
+
+def build_engine(cfg, qparams, n, *, slo, window, window_ticks, optimism,
+                 open_loop, prompt_len, max_new, slots):
+    cfgs = {"int4": pol.fixed(4), "int8": pol.fixed(8)}
+    preds = predict_table(lm.layer_gemm_dims(cfg), cfgs, axis="edp",
+                          units=prompt_len + max_new,
+                          head=lm.head_gemm_dims(cfg), optimism=optimism)
+    # open loop = an unconstrained fluid controller (slo=inf): same code
+    # path and trace shape, but no feedback — it trusts the table blindly
+    ctrl = pol.FluidController(
+        cfgs, preds, n, budget_axis="edp",
+        slo=float("inf") if open_loop else slo(preds), window=window,
+        window_ticks=0 if open_loop else window_ticks)
+    return ServeEngine(cfg, qparams, max_len=64, controller=ctrl,
+                       n_slots=slots, prefill_len=prompt_len,
+                       decode_block=max_new), preds
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="spike",
+                    choices=("poisson", "diurnal", "spike"))
+    ap.add_argument("--ticks", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repetition", type=float, default=0.0,
+                    help="unique-vs-repeated request mix in [0, 1)")
+    ap.add_argument("--burst-mag", type=float, default=10.0)
+    ap.add_argument("--burst-len", type=int, default=3)
+    ap.add_argument("--depth", type=float, default=0.9,
+                    help="diurnal modulation depth")
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--open", action="store_true",
+                    help="open-loop baseline instead of the closed loop")
+    ap.add_argument("--slo-x", type=float, default=1.2,
+                    help="EDP SLO as a multiple of the predicted int8 "
+                         "cost of the whole stream (or of one window "
+                         "under --window-ticks)")
+    ap.add_argument("--window-ticks", type=int, default=0,
+                    help=">0: rate SLO per this many scheduler ticks")
+    ap.add_argument("--optimism", type=float, default=0.5,
+                    help="prediction-table scale (<1 = optimistic: the "
+                         "closed loop must correct for it)")
+    ap.add_argument("--max-ticks", type=int, default=10_000)
+    ap.add_argument("--report-window", type=int, default=6,
+                    help="ticks per bits/arrivals reporting window")
+    ap.add_argument("--out", default=None, help="also write the report "
+                                                "as JSON")
+    args = ap.parse_args(argv)
+
+    trace = tf.synth_trace(
+        args.trace, ticks=args.ticks, rate=args.rate, seed=args.seed,
+        repetition=args.repetition, burst_mag=args.burst_mag,
+        burst_len=args.burst_len, depth=args.depth, lm_archs=(args.arch,),
+        prompt_len=args.prompt_len, max_new_tokens=args.max_new)
+    print(f"trace: {args.trace}, {trace.n_requests} requests over "
+          f"{trace.ticks} ticks (seed {args.seed})")
+
+    cfg = configs.get_smoke(args.arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = lm.quantize_params(params, cfg)
+
+    def slo(preds):
+        if args.window_ticks:
+            return args.window_ticks * args.rate * preds["int8"] * args.slo_x
+        return trace.n_requests * preds["int8"] * args.slo_x
+
+    eng, _ = build_engine(
+        cfg, qparams, lm.n_bit_slots(cfg), slo=slo, window=trace.n_requests,
+        window_ticks=args.window_ticks, optimism=args.optimism,
+        open_loop=args.open, prompt_len=args.prompt_len,
+        max_new=args.max_new, slots=args.slots)
+
+    meta = {}
+
+    def arrival(req):
+        def submit():
+            rid = eng.submit(
+                tf.payload_tokens(trace, req, cfg.vocab_size),
+                max_new_tokens=req.max_new_tokens)
+            meta[rid] = req
+            return rid
+        return submit
+
+    for req in trace.requests:
+        eng.submit_at(req.t, arrival(req))
+    t0 = time.time()
+    eng.run(args.max_ticks, on_exhaust="report")
+    rep = tf.result_from_runtime(eng, meta).report(
+        window=args.report_window)
+
+    mode = "open loop" if args.open else (
+        f"closed loop (rate SLO per {args.window_ticks} ticks)"
+        if args.window_ticks else "closed loop (whole-stream SLO)")
+    print(f"{mode}: {rep['completed']}/{rep['requests']} served, "
+          f"{rep['unserved']} unserved, mean_wbits={rep['mean_wbits']}, "
+          f"p50/p99 latency {rep['p50_latency_ticks']:.0f}/"
+          f"{rep['p99_latency_ticks']:.0f} ticks, "
+          f"total EDP {rep['total_edp_js']:.3e} J*s, "
+          f"queue peak {rep['queue_depth']['peak']}")
+    print(f"bits/window    : {rep['mean_wbits_per_window']}")
+    print(f"arrivals/window: {rep['arrivals_per_window']}")
+    print(f"compiled once: prefill x{eng.stats.prefill_traces}, "
+          f"decode x{eng.stats.decode_traces} ({time.time() - t0:.1f}s "
+          f"wall)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0 if rep["unserved"] == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -246,31 +246,71 @@ class FluidController(BudgetController):
     closed-loop config switches never retrace.  Window rollover expires
     unused credit but carries debt, keeping the long-run average at the
     SLO.
+
+    Two window shapes (the rollover semantics under bursty arrivals):
+
+      * admission-count (``window_ticks == 0``, the default): ``slo``
+        units per ``window`` admissions.  Load-independent — a 10x
+        burst spends the window 10x faster and later admissions tighten,
+        but an idle hour and a busy hour get the same budget per
+        request.
+      * tick-based (``window_ticks > 0``): ``slo`` units per
+        ``window_ticks`` *scheduler ticks* — a rate SLO.  The serving
+        runtime calls :meth:`tick` once per scheduler tick; headroom
+        splits the remaining window budget over the admissions known to
+        be waiting (``pending``), so a burst that deepens the queue
+        tightens every admission's share immediately while a trough
+        (empty queue) relaxes back to full precision.  This is the
+        window shape the traffic harness's diurnal/spike experiments
+        drive (``serve/traffic.py``).
     """
     slo: float = float("inf")      # budget-axis units per window
     window: int = 32               # admissions per SLO window
+    window_ticks: int = 0          # >0: roll on scheduler ticks instead
     spent: float = 0.0             # charged so far in this window
     served: int = 0                # admissions charged in this window
+    ticks: int = 0                 # scheduler ticks elapsed in this window
 
-    def headroom(self) -> float:
-        """Per-admission share of the remaining window budget."""
-        left = max(self.window - self.served, 1)
+    def headroom(self, pending: int = 1) -> float:
+        """Per-admission share of the remaining window budget.
+
+        ``pending`` (tick-based windows only) is how many admissions are
+        known to be competing for the remainder — the runtime passes its
+        queue depth; admission-count windows split over the window's
+        remaining admission slots instead."""
+        if self.window_ticks:
+            left = max(pending, 1)
+        else:
+            left = max(self.window - self.served, 1)
         return max(self.slo - self.spent, 0.0) / left
 
-    def admission_budget(self, requested: Optional[float] = None) -> float:
+    def admission_budget(self, requested: Optional[float] = None,
+                         pending: int = 1) -> float:
         """Effective budget for the next admission: the closed-loop
         headroom, tightened by the request's own budget when it has one."""
-        h = self.headroom()
+        h = self.headroom(pending)
         return h if requested is None else min(float(requested), h)
 
     def charge(self, amount: float) -> None:
         """Record one admission's actual (priced) budget-axis cost."""
         self.spent += float(amount)
         self.served += 1
-        if self.served >= self.window:
-            # roll the window: unused credit expires, debt carries over
-            self.spent = max(self.spent - self.slo, 0.0)
-            self.served = 0
+        if not self.window_ticks and self.served >= self.window:
+            self._roll()
+
+    def tick(self) -> None:
+        """One scheduler tick (tick-based windows; no-op otherwise)."""
+        if not self.window_ticks:
+            return
+        self.ticks += 1
+        if self.ticks >= self.window_ticks:
+            self._roll()
+
+    def _roll(self) -> None:
+        # roll the window: unused credit expires, debt carries over
+        self.spent = max(self.spent - self.slo, 0.0)
+        self.served = 0
+        self.ticks = 0
 
     def reconcile(self, delta: float) -> None:
         """Adjust the ledger after a request finishes: admissions are
@@ -281,9 +321,10 @@ class FluidController(BudgetController):
 
     @classmethod
     def from_open_loop(cls, ctrl: BudgetController, *, slo: float,
-                       window: int = 32) -> "FluidController":
+                       window: int = 32,
+                       window_ticks: int = 0) -> "FluidController":
         """Wrap an existing controller's configs/predictions in a
         closed-loop SLO window (axis carried over)."""
         return cls(dict(ctrl.configs), dict(ctrl.predicted_latency_s),
                    ctrl.n_layers, budget_axis=ctrl.budget_axis,
-                   slo=slo, window=window)
+                   slo=slo, window=window, window_ticks=window_ticks)

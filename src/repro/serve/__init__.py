@@ -4,3 +4,5 @@ from repro.serve.accounting import (CostRecord, ImageStats,  # noqa: F401
 from repro.serve.cnn import CNNServeEngine  # noqa: F401
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.runtime import ServeRuntime, SlotTable  # noqa: F401
+from repro.serve.traffic import (Trace, TraceReplayer,  # noqa: F401
+                                 TraceRequest, summarize, synth_trace)

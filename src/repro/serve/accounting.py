@@ -38,9 +38,20 @@ class RuntimeStats:
         self.completed = 0              # LM: requests retired
         self.batches = 0                # CNN: serve() calls
         self.images = 0                 # CNN: real (unpadded) images served
+        self.unserved = 0               # requests left pending at run() exit
+        self.ticks = 0                  # scheduler ticks recorded
+        self.queue_depth: List[int] = []   # queued requests after each tick
+        self.active_depth: List[int] = []  # occupied slots after each tick
 
     def trace(self, program: str) -> None:
         self.traces[program] = self.traces.get(program, 0) + 1
+
+    def record_tick(self, queued: int, active: int) -> None:
+        """One scheduler tick's queue instrumentation (the traffic
+        harness's queue-depth-over-time series reads these)."""
+        self.ticks += 1
+        self.queue_depth.append(int(queued))
+        self.active_depth.append(int(active))
 
     def __getattr__(self, name: str) -> int:
         if name.endswith("_traces"):
@@ -76,6 +87,11 @@ class CostRecord:
     planned_units: int = 1              # units charged at admission (the
                                         # runtime reconciles vs ap_units
                                         # when the request finishes)
+    # scheduler-tick timing (deterministic, unlike wall clock): set by the
+    # runtime when requests arrive/admit/finish inside a ticked run()/replay
+    submitted_tick: int = -1
+    admitted_tick: int = -1
+    finished_tick: int = -1
 
     @property
     def ap_units(self) -> int:
@@ -87,6 +103,15 @@ class CostRecord:
         """Wall-clock submit-to-finish latency (0.0 until done)."""
         return max(self.finished_s - self.submitted_s, 0.0) if self.done \
             else 0.0
+
+    @property
+    def latency_ticks(self) -> int:
+        """Submit-to-finish latency in scheduler ticks (-1 until done or
+        outside a ticked run — the traffic harness's deterministic
+        latency axis)."""
+        if not self.done or self.submitted_tick < 0 or self.finished_tick < 0:
+            return -1
+        return self.finished_tick - self.submitted_tick
 
     @property
     def ap_latency_s(self) -> float:

@@ -386,6 +386,9 @@ class ServeEngine(ServeRuntime):
     def _has_active(self) -> bool:
         return bool(self.slots.active.any())
 
+    def _active_count(self) -> int:
+        return int(self.slots.active.sum())
+
     def _can_admit(self) -> bool:
         return self.n_slots >= 1
 

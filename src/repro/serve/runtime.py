@@ -26,7 +26,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -122,6 +122,12 @@ class ServeRuntime:
         self._pending: List[_QueueEntry] = []
         self._config_costs: Optional[List[apm.BitVectorCost]] = None
         self._lats_np: Optional[np.ndarray] = None
+        # scheduler clock + deferred (timestamped) arrivals: submit_at()
+        # registers a submit thunk for a future tick; run() drains the
+        # due thunks at the top of each tick (trace replay enqueues by
+        # timestamp, never all-up-front)
+        self._tick = 0
+        self._arrivals: Dict[int, List[Callable[[], int]]] = {}
 
     # ------------------------------------------------------------------
     # Pricing / control loop
@@ -149,11 +155,18 @@ class ServeRuntime:
                                   for i in range(wtab.shape[0])]
         return self._config_costs[idx]
 
-    def admission_budget(self, requested: Optional[float] = None) -> float:
+    def admission_budget(self, requested: Optional[float] = None,
+                         pending: Optional[int] = None) -> float:
         """Effective budget for the next admission: closed-loop headroom
-        under a FluidController, the request's own budget otherwise."""
+        under a FluidController, the request's own budget otherwise.
+        ``pending`` (tick-windowed controllers) is how many admissions
+        compete for the remaining window budget — defaults to this
+        admission plus everything still queued."""
         if isinstance(self.controller, FluidController):
-            return self.controller.admission_budget(requested)
+            if pending is None:
+                pending = self.queued + 1
+            return self.controller.admission_budget(requested,
+                                                    pending=pending)
         return (float(requested) if requested is not None
                 else UNCONSTRAINED_BUDGET)
 
@@ -177,6 +190,7 @@ class ServeRuntime:
         record.ap_cost = cost
         record.mean_wbits = float(np.mean(np.asarray(wv, np.float64)))
         record.planned_units = units
+        record.admitted_tick = self._tick
         self.charge(cost, units)
         self.stats.admitted += 1
         return wv, av
@@ -192,7 +206,8 @@ class ServeRuntime:
         fluid = isinstance(self.controller, FluidController)
         eff = np.empty((len(budgets),), np.float64)
         for i, b in enumerate(budgets):
-            e = self.admission_budget(b)
+            # the rest of this batch competes for the same window budget
+            e = self.admission_budget(b, pending=len(budgets) - i)
             if fluid:
                 self.charge(self._config_cost(self._host_index(e)), units)
             eff[i] = e
@@ -205,6 +220,7 @@ class ServeRuntime:
     def new_record(self, record: CostRecord, payload: object,
                    requested: Optional[float]) -> int:
         """Register a submitted request and enqueue it for admission."""
+        record.submitted_tick = self._tick
         self.requests[record.rid] = record
         est = 0.0
         if self.pricer is not None:
@@ -213,6 +229,17 @@ class ServeRuntime:
             est = self._config_cost(self._host_index(open_budget)).edp
         self._pending.append(_QueueEntry(record.rid, payload, est))
         return record.rid
+
+    def submit_at(self, tick: int, submit: Callable[[], int]) -> None:
+        """Register a deferred arrival: ``submit`` (a thunk that calls
+        the adapter's ``submit(...)``) runs when the scheduler clock
+        reaches ``tick`` inside :meth:`run` — the trace-replay entry
+        point (arrivals enqueue by timestamp, not all-up-front)."""
+        t = int(tick)
+        if t < self._tick:
+            raise ValueError(f"arrival tick {t} is in the past "
+                             f"(scheduler clock is at {self._tick})")
+        self._arrivals.setdefault(t, []).append(submit)
 
     def next_rid(self) -> int:
         rid = self._next_rid
@@ -247,6 +274,7 @@ class ServeRuntime:
         record = self.requests[rid]
         record.done = True
         record.finished_s = time.time()
+        record.finished_tick = self._tick
         self.stats.completed += 1
         # admissions were charged their PLANNED units; a request that
         # terminated early (eos) refunds the unused share, so the SLO
@@ -270,25 +298,59 @@ class ServeRuntime:
     def _has_active(self) -> bool:              # pragma: no cover - abstract
         raise NotImplementedError
 
+    def _active_count(self) -> int:
+        """Occupied-slot count for the queue-depth instrumentation
+        (adapters with a slot pool override)."""
+        return 0
+
     def _can_admit(self) -> bool:
         return True
 
-    def run(self, max_ticks: int = 10_000) -> Dict[int, CostRecord]:
-        """Pump the scheduler until every submitted request completes;
-        returns {rid: record}.  Raises if the queue cannot drain (no
-        slots, or max_ticks exhausted) rather than silently returning
-        incomplete results."""
+    def sched_tick(self) -> List[int]:
+        """One instrumented scheduler tick: advance tick-windowed fluid
+        controllers, run the adapter's :meth:`step`, record queue depth,
+        and advance the scheduler clock.  Returns the rids that finished
+        during the tick."""
+        if isinstance(self.controller, FluidController):
+            self.controller.tick()
+        done = self.step()
+        self.stats.record_tick(self.queued, self._active_count())
+        self._tick += 1
+        return done
+
+    def run(self, max_ticks: int = 10_000, *,
+            on_exhaust: str = "raise") -> Dict[int, CostRecord]:
+        """Pump the scheduler until every submitted request — including
+        deferred :meth:`submit_at` arrivals — completes; returns
+        {rid: record}.
+
+        If the queue cannot drain within ``max_ticks``, the leftover
+        requests are counted in ``stats.unserved`` (their records stay
+        ``done=False``) and the runtime raises — or, with
+        ``on_exhaust="report"``, returns the partial result so callers
+        (the traffic harness) can report rejections honestly instead of
+        crashing mid-experiment."""
+        if on_exhaust not in ("raise", "report"):
+            raise ValueError(f"on_exhaust must be 'raise' or 'report', "
+                             f"got {on_exhaust!r}")
         for _ in range(max_ticks):
-            if not self._pending and not self._has_active():
+            for submit in self._arrivals.pop(self._tick, ()):
+                submit()
+            if (not self._pending and not self._has_active()
+                    and not self._arrivals):
                 return dict(self.requests)
             if self._pending and not self._can_admit():
                 raise RuntimeError("engine has no slots; requests can "
                                    "never be admitted")
-            self.step()
-        still = [r.rid for r in self.requests.values() if not r.done]
-        if still:
-            raise RuntimeError(f"run() exhausted {max_ticks} ticks with "
-                               f"requests still pending: {still}")
+            self.sched_tick()
+        still = sorted(r.rid for r in self.requests.values() if not r.done)
+        late = sum(len(v) for v in self._arrivals.values())
+        self.stats.unserved = len(still) + late
+        if self.stats.unserved and on_exhaust == "raise":
+            raise RuntimeError(
+                f"run() exhausted {max_ticks} ticks with {len(still)} "
+                f"requests still pending ({late} arrivals never enqueued): "
+                f"rids {still}")
         return dict(self.requests)
 
     # ------------------------------------------------------------------
