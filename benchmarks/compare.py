@@ -8,7 +8,8 @@ wins), applied to each module's curated ``metrics`` dict plus its
 ``rc``:
 
 * ``rc`` — HARD: a module that passed at baseline must still pass.
-* ``*attainment*`` — HARD: SLO attainment must not drop at all.
+* ``*attainment*`` / ``*hit_rate*`` — HARD: must-not-drop floors (SLO
+  attainment; the prefix-cache tier's deterministic hit rate).
 * relative throughput (``*speedup*`` / ``*geomean*`` /
   ``*throughput*`` — machine-relative ratios) — HARD: may regress at
   most 15%.
@@ -34,8 +35,13 @@ Refresh the baseline after an intentional perf/metric change::
 
     python -m benchmarks.run --smoke && \
     PYTHONPATH=src python -m benchmarks.traffic_elasticity && \
-    python -m benchmarks.compare --write-baseline \
+    python -m benchmarks.compare --update-baseline \
         --current BENCH_smoke.json BENCH_traffic.json
+
+``--update-baseline`` merges the given suites into the committed
+baseline IN PLACE (suites not re-run keep their baseline records);
+``--write-baseline`` replaces the whole file with exactly the given
+suites (dropping any others) — use it only for a from-scratch rebuild.
 """
 from __future__ import annotations
 
@@ -89,7 +95,7 @@ def classify(path: str) -> str:
         return "time"
     if leaf == "rc":
         return "rc"
-    if "attainment" in leaf:
+    if "attainment" in leaf or "hit_rate" in leaf:
         return "attainment"
     if any(leaf.endswith(k) for k in RATE_KEYS):
         return "rate"
@@ -116,7 +122,7 @@ def judge(cls: str, base: float, cur: Optional[float]) -> Tuple[str, str]:
         return ("ok", "") if cur == base else (INFO, "rc changed")
     if cls == "attainment":
         if cur < base - 1e-9:
-            return HARD, "SLO attainment dropped"
+            return HARD, "must-not-drop metric fell"
         return "ok", ""
     if cls == "throughput":
         if base > 0 and cur < 0.85 * base:
@@ -211,8 +217,12 @@ def main(argv=None) -> int:
                     help="file to APPEND the markdown table to "
                          "(CI: $GITHUB_STEP_SUMMARY)")
     ap.add_argument("--write-baseline", action="store_true",
-                    help="regenerate --baseline from --current instead "
-                         "of comparing")
+                    help="REPLACE --baseline with exactly the --current "
+                         "suites (drops suites not re-run)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="merge the --current suites into --baseline in "
+                         "place (suites not re-run keep their baseline "
+                         "records)")
     args = ap.parse_args(argv)
 
     currents = []
@@ -220,13 +230,23 @@ def main(argv=None) -> int:
         with open(path) as f:
             currents.append(json.load(f))
 
-    if args.write_baseline:
-        merged = {rec.get("suite", f"suite{i}"): rec
-                  for i, rec in enumerate(currents)}
+    if args.write_baseline or args.update_baseline:
+        merged = {}
+        if args.update_baseline:
+            try:
+                with open(args.baseline) as f:
+                    merged = json.load(f)
+            except FileNotFoundError:
+                pass                    # first refresh seeds the file
+        fresh = {rec.get("suite", f"suite{i}"): rec
+                 for i, rec in enumerate(currents)}
+        merged.update(fresh)
         with open(args.baseline, "w") as f:
             json.dump(merged, f, indent=1, sort_keys=True)
-        print(f"[compare] wrote baseline {args.baseline} "
-              f"(suites: {', '.join(sorted(merged))})")
+        verb = "updated" if args.update_baseline else "wrote"
+        print(f"[compare] {verb} baseline {args.baseline} "
+              f"(refreshed: {', '.join(sorted(fresh))}; "
+              f"suites now: {', '.join(sorted(merged))})")
         return 0
 
     with open(args.baseline) as f:

@@ -34,8 +34,9 @@ def main(argv=None) -> int:
 
     from benchmarks import (calibrate, cnn_serve, fig5_runtimes,
                             fig6_technology, fig7_dse, fig8_breakdown,
-                            grouped_dispatch, roofline, serve_runtime,
-                            serve_throughput, table7_bitfluid, table8_sota,
+                            grouped_dispatch, prefix_cache, roofline,
+                            serve_runtime, serve_throughput,
+                            table7_bitfluid, table8_sota,
                             traffic_elasticity)
     mods = [
         ("calibrate", calibrate),
@@ -50,6 +51,7 @@ def main(argv=None) -> int:
         ("cnn_serve", cnn_serve),
         ("serve_runtime", serve_runtime),
         ("traffic_elasticity", traffic_elasticity),
+        ("prefix_cache", prefix_cache),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))

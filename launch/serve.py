@@ -33,10 +33,11 @@ from repro.models import lm
 from repro.serve import predict_table
 from repro.serve import traffic as tf
 from repro.serve.engine import ServeEngine
+from repro.serve.prefix_cache import PrefixCache
 
 
 def build_engine(cfg, qparams, n, *, slo, window, window_ticks, optimism,
-                 open_loop, prompt_len, max_new, slots):
+                 open_loop, prompt_len, max_new, slots, prefix_cache=None):
     cfgs = {"int4": pol.fixed(4), "int8": pol.fixed(8)}
     preds = predict_table(lm.layer_gemm_dims(cfg), cfgs, axis="edp",
                           units=prompt_len + max_new,
@@ -49,7 +50,8 @@ def build_engine(cfg, qparams, n, *, slo, window, window_ticks, optimism,
         window_ticks=0 if open_loop else window_ticks)
     return ServeEngine(cfg, qparams, max_len=64, controller=ctrl,
                        n_slots=slots, prefill_len=prompt_len,
-                       decode_block=max_new), preds
+                       decode_block=max_new,
+                       prefix_cache=prefix_cache), preds
 
 
 def main(argv=None) -> int:
@@ -61,6 +63,17 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repetition", type=float, default=0.0,
                     help="unique-vs-repeated request mix in [0, 1)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="serve through the cross-request prefix/KV-"
+                         "cache tier and print its hit/miss ledger")
+    ap.add_argument("--cache-capacity", type=int, default=32,
+                    help="prefix-cache entries (repetition-aware "
+                         "eviction past this)")
+    ap.add_argument("--cache-chunk", type=int, default=4,
+                    help="prefix-cache chunk alignment for partial hits")
+    ap.add_argument("--hit-policy", default="at_least",
+                    choices=("exact", "at_least", "repriced"),
+                    help="precision gate for cache hits")
     ap.add_argument("--burst-mag", type=float, default=10.0)
     ap.add_argument("--burst-len", type=int, default=3)
     ap.add_argument("--depth", type=float, default=0.9,
@@ -104,11 +117,15 @@ def main(argv=None) -> int:
             return args.window_ticks * args.rate * preds["int8"] * args.slo_x
         return trace.n_requests * preds["int8"] * args.slo_x
 
+    cache = (PrefixCache(chunk=args.cache_chunk,
+                         capacity=args.cache_capacity,
+                         hit_policy=args.hit_policy)
+             if args.prefix_cache else None)
     eng, _ = build_engine(
         cfg, qparams, lm.n_bit_slots(cfg), slo=slo, window=trace.n_requests,
         window_ticks=args.window_ticks, optimism=args.optimism,
         open_loop=args.open, prompt_len=args.prompt_len,
-        max_new=args.max_new, slots=args.slots)
+        max_new=args.max_new, slots=args.slots, prefix_cache=cache)
 
     meta = {}
 
@@ -116,7 +133,7 @@ def main(argv=None) -> int:
         def submit():
             rid = eng.submit(
                 tf.payload_tokens(trace, req, cfg.vocab_size),
-                max_new_tokens=req.max_new_tokens)
+                max_new_tokens=req.max_new_tokens, rep_key=req.key)
             meta[rid] = req
             return rid
         return submit
@@ -139,8 +156,23 @@ def main(argv=None) -> int:
           f"queue peak {rep['queue_depth']['peak']}")
     print(f"bits/window    : {rep['mean_wbits_per_window']}")
     print(f"arrivals/window: {rep['arrivals_per_window']}")
+    kr = rep["repetition"]
+    print(f"repetition     : {kr['distinct_keys']} distinct keys / "
+          f"{kr['arrivals']} arrivals, top-key share "
+          f"{kr['top_key_share']:.2f}, max hit-rate {kr['max_hit_rate']:.2f}")
+    if cache is not None:
+        led = cache.ledger
+        print(f"prefix cache   : {led.hits} full + {led.partial_hits} "
+              f"partial hits / {led.lookups} lookups "
+              f"(rate {led.hit_rate:.2f}), {led.misses} misses "
+              f"({led.refreshes} refreshes), {led.evictions} evictions, "
+              f"{led.rejected} rejected, {led.hit_tokens} tokens served "
+              f"from cache, prefill EDP saved "
+              f"{led.prefill_edp_saved_js:.3e} J*s")
+        rep["prefix_cache"] = led.as_dict()
     print(f"compiled once: prefill x{eng.stats.prefill_traces}, "
-          f"decode x{eng.stats.decode_traces} ({time.time() - t0:.1f}s "
+          f"decode x{eng.stats.decode_traces}, "
+          f"extend x{eng.stats.extend_traces} ({time.time() - t0:.1f}s "
           f"wall)")
     if args.out:
         with open(args.out, "w") as f:

@@ -1,0 +1,12 @@
+"""Cross-request caching policies (DESIGN.md §10).
+
+The serving tier's prefix/KV cache (``repro.serve.prefix_cache``) is
+deliberately split from its *policy*: this package owns the questions
+"is a cached entry allowed to serve this request?" (precision gating,
+:data:`HIT_POLICIES`) and "which entry is worth keeping?"
+(:class:`RepetitionAwarePolicy` — admission/eviction priced in AP-cost
+terms), so alternative policies can be swapped without touching the KV
+plumbing.
+"""
+from repro.cache.policy import (HIT_POLICIES, CacheLedger,  # noqa: F401
+                                RepetitionAwarePolicy, hit_allowed)

@@ -270,6 +270,10 @@ class FluidController(BudgetController):
     spent: float = 0.0             # charged so far in this window
     served: int = 0                # admissions charged in this window
     ticks: int = 0                 # scheduler ticks elapsed in this window
+    saved: float = 0.0             # cumulative budget-axis cost avoided by
+                                   # the prefix-cache tier (hits charge only
+                                   # their miss fraction; this tracks the
+                                   # difference — introspection, not spend)
 
     def headroom(self, pending: int = 1) -> float:
         """Per-admission share of the remaining window budget.
@@ -311,6 +315,14 @@ class FluidController(BudgetController):
         self.spent = max(self.spent - self.slo, 0.0)
         self.served = 0
         self.ticks = 0
+
+    def record_saved(self, amount: float) -> None:
+        """Track budget-axis cost a cache hit avoided charging.  The
+        SLO window itself only ever sees the miss fraction (that's the
+        point: hits free budget for higher-precision admissions); this
+        running total is the controller's own view of how much the
+        cache tier is subsidizing the window."""
+        self.saved += float(amount)
 
     def reconcile(self, delta: float) -> None:
         """Adjust the ledger after a request finishes: admissions are

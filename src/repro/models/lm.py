@@ -487,6 +487,30 @@ class CachePool:
                     (0, slot) + (0,) * (p.ndim - 2)),
                 pool, row)
 
+        def install_row(pool, row, slot, keep):
+            # write_row + a visibility clamp: positions >= keep in the
+            # incoming row are masked EMPTY, so a cached row installs as
+            # exactly its first ``keep`` tokens (partial-prefix hits)
+            def leaf(path, p, r):
+                r = r.astype(p.dtype)
+                if path and path[-1] == "kpos":
+                    r = jnp.where(r >= keep, tf.EMPTY_POS, r)
+                return jax.lax.dynamic_update_slice(
+                    p, r, (0, slot) + (0,) * (p.ndim - 2))
+            return jax.tree_util.tree_map_with_path(
+                lambda path, p, r: leaf(tuple(
+                    str(getattr(k, "key", k)) for k in path), p, r),
+                pool, row)
+
+        def copy_row(pool, src, dst):
+            def leaf(p):
+                row = jax.lax.dynamic_slice(
+                    p, (0, src) + (0,) * (p.ndim - 2),
+                    (p.shape[0], 1) + p.shape[2:])
+                return jax.lax.dynamic_update_slice(
+                    p, row, (0, dst) + (0,) * (p.ndim - 2))
+            return jax.tree.map(leaf, pool)
+
         def reset_row(pool, slot):
             def leaf(p, path):
                 if path and path[-1] == "kpos":
@@ -500,6 +524,8 @@ class CachePool:
                     str(getattr(k, "key", k)) for k in path)), pool)
 
         self._write = jax.jit(write_row, donate_argnums=(0,))
+        self._install = jax.jit(install_row, donate_argnums=(0,))
+        self._copy = jax.jit(copy_row, donate_argnums=(0,))
         self._reset = jax.jit(reset_row, donate_argnums=(0,))
 
     @property
@@ -522,8 +548,50 @@ class CachePool:
         self.lengths[slot] = 0
         self.cache = self._reset(self.cache, jnp.asarray(slot, jnp.int32))
 
+    def _check_install(self, slot: int, length: int) -> None:
+        """Guard every row install: silent corruption otherwise (an
+        out-of-range length poisons the host-side length table, and a
+        write into an unallocated slot is clobbered by the next
+        ``alloc`` — double-free is caught, so double-install must be
+        too)."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range "
+                             f"[0, {self.n_slots})")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is free — alloc() it before "
+                             f"installing a row")
+        if not 0 <= length <= self.max_len:
+            raise ValueError(f"row length {length} not in "
+                             f"[0, max_len={self.max_len}]")
+
     def write_row(self, row_cache, slot: int, length: int) -> None:
         """Install a prefilled single-row cache into ``slot``."""
+        self._check_install(slot, length)
         self.lengths[slot] = length
         self.cache = self._write(self.cache, row_cache,
                                  jnp.asarray(slot, jnp.int32))
+
+    def install_prefix(self, row_cache, slot: int, keep: int) -> None:
+        """Install the first ``keep`` tokens of a cached single-row
+        cache into ``slot`` (the prefix-cache hit path): positions
+        >= ``keep`` are masked EMPTY on the way in, and the source row
+        is copied, never donated — the cache tier keeps its entry."""
+        self._check_install(slot, keep)
+        self.lengths[slot] = keep
+        self.cache = self._install(self.cache, row_cache,
+                                   jnp.asarray(slot, jnp.int32),
+                                   jnp.asarray(keep, jnp.int32))
+
+    def copy_row(self, src: int, dst: int,
+                 length: Optional[int] = None) -> None:
+        """Duplicate one resident row into another allocated slot
+        (traced-index gather + write — no retrace, no host copy)."""
+        if src in self._free:
+            raise ValueError(f"source slot {src} is free — nothing to "
+                             f"copy")
+        self._check_install(dst, int(self.lengths[src]
+                                     if length is None else length))
+        self.lengths[dst] = (self.lengths[src] if length is None
+                             else length)
+        self.cache = self._copy(self.cache, jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32))

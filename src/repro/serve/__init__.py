@@ -3,6 +3,8 @@ from repro.serve.accounting import (CostRecord, ImageStats,  # noqa: F401
                                     predict_table)
 from repro.serve.cnn import CNNServeEngine  # noqa: F401
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.prefix_cache import (PrefixCache, PrefixEntry,  # noqa: F401
+                                      PrefixHit)
 from repro.serve.runtime import ServeRuntime, SlotTable  # noqa: F401
 from repro.serve.traffic import (Trace, TraceReplayer,  # noqa: F401
                                  TraceRequest, summarize, synth_trace)

@@ -87,6 +87,16 @@ class CostRecord:
     planned_units: int = 1              # units charged at admission (the
                                         # runtime reconciles vs ap_units
                                         # when the request finishes)
+    # prefix-cache hit/miss split (DESIGN.md §10): units served from the
+    # cross-request cache are NOT recomputed, so they drop out of
+    # ap_units (and hence energy/EDP) — the counterfactual saving reads
+    # from prefill_edp_saved_js.  Under the ``repriced`` hit policy the
+    # cached precision/cost is recorded alongside, keeping the ledger
+    # honest about which bits actually produced the cached rows.
+    cached_units: int = 0               # prompt units served from cache
+    cache_hit: str = ""                 # "" | "full" | "partial"
+    cached_cost: Optional[apm.BitVectorCost] = None
+    cached_mean_wbits: float = 0.0
     # scheduler-tick timing (deterministic, unlike wall clock): set by the
     # runtime when requests arrive/admit/finish inside a ticked run()/replay
     submitted_tick: int = -1
@@ -132,6 +142,17 @@ class CostRecord:
         """Modeled AP energy-delay product (J·s) of the whole request."""
         return self.ap_energy_j * self.ap_latency_s
 
+    @property
+    def prefill_edp_js(self) -> float:
+        """Modeled EDP actually spent on prefill (LM records override)."""
+        return 0.0
+
+    @property
+    def prefill_edp_saved_js(self) -> float:
+        """Counterfactual prefill EDP avoided by cache hits (LM records
+        override; 0 for workloads without a prefill phase)."""
+        return 0.0
+
 
 @dataclasses.dataclass
 class RequestStats(CostRecord):
@@ -151,7 +172,28 @@ class RequestStats(CostRecord):
 
     @property
     def ap_units(self) -> int:
-        return self.processed_tokens
+        """Units the AP actually computed: cached prompt tokens were
+        installed from the prefix cache, never recomputed."""
+        return self.processed_tokens - self.cached_units
+
+    @property
+    def prefill_edp_js(self) -> float:
+        """Modeled EDP of the prompt tokens this request re-prefilled
+        (prompt minus cache-served tokens, at its own resolved cost)."""
+        if self.ap_cost is None:
+            return 0.0
+        u = self.prompt_len - self.cached_units
+        return (u * self.ap_cost.energy_j) * (u * self.ap_cost.latency_s)
+
+    @property
+    def prefill_edp_saved_js(self) -> float:
+        """Counterfactual: the prefill EDP a cache-less serve of the
+        full prompt would have cost, minus what this request spent."""
+        if self.ap_cost is None or not self.cached_units:
+            return 0.0
+        s = self.prompt_len
+        full = (s * self.ap_cost.energy_j) * (s * self.ap_cost.latency_s)
+        return full - self.prefill_edp_js
 
     @property
     def ap_cycles_per_token(self) -> float:
@@ -197,6 +239,7 @@ def aggregate(records: Iterable[CostRecord]) -> Dict[str, float]:
     stats totals equal these per-request sums.
     """
     recs = list(records)
+    hits = sum(1 for r in recs if r.cached_units > 0)
     return {
         "requests": len(recs),
         "completed": sum(1 for r in recs if r.done),
@@ -204,6 +247,11 @@ def aggregate(records: Iterable[CostRecord]) -> Dict[str, float]:
         "ap_latency_s": sum(r.ap_latency_s for r in recs),
         "ap_energy_j": sum(r.ap_energy_j for r in recs),
         "edp": sum(r.edp for r in recs),
+        # prefix-cache tier split (0 / 0.0 when no tier is configured)
+        "prefix_hits": hits,
+        "prefix_hit_rate": round(hits / len(recs), 4) if recs else 0.0,
+        "cached_units": sum(r.cached_units for r in recs),
+        "prefill_edp_saved_js": sum(r.prefill_edp_saved_js for r in recs),
     }
 
 

@@ -46,7 +46,9 @@ from repro.core.policy import (BudgetController, FluidController,
                                PrecisionPolicy)
 from repro.dist import sharding as shd
 from repro.models import lm
+from repro.models.transformer import EMPTY_POS
 from repro.serve.accounting import RequestStats, RuntimeStats  # noqa: F401
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.runtime import (ServeRuntime, SlotTable,
                                  UNCONSTRAINED_BUDGET)
 
@@ -63,6 +65,8 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     prefix: Optional[np.ndarray] = None  # vlm: (n_prefix_tokens, d) stub
+    rep_key: Optional[int] = None       # traffic repetition key (the
+                                        # prefix-cache count signal)
 
 
 def _sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
@@ -102,7 +106,7 @@ class ServeEngine(ServeRuntime):
                  policy: Optional[PrecisionPolicy] = None,
                  mesh=None, n_slots: int = 4, prefill_len: int = 32,
                  decode_block: int = 8, eos_id: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, prefix_cache: Optional[PrefixCache] = None):
         self.cfg = cfg
         mesh = mesh if mesh is not None else dist.active_mesh()
         if mesh is not None:            # place serve weights once, sharded
@@ -139,6 +143,13 @@ class ServeEngine(ServeRuntime):
         self.budget_s = jnp.asarray(1e9, jnp.float32)
         self.row_bits = cfg.family in lm.PER_ROW_BIT_FAMILIES
         self._key = jax.random.PRNGKey(seed)
+        # cross-request prefix/KV-cache tier (DESIGN.md §10): only
+        # prompts that fit the cache ring entirely are cacheable (a
+        # wrapped prefix would install an incomplete row), and vlm
+        # requests bypass (their prefix embeddings aren't content-keyed)
+        self.prefix_cache = prefix_cache
+        self._cache_sc = (min(max_len, cfg.sliding_window)
+                          if cfg.sliding_window else max_len)
 
         # ---- continuous-batching state (pool built lazily on first submit)
         self.pool: Optional[lm.CachePool] = None
@@ -185,11 +196,46 @@ class ServeEngine(ServeRuntime):
         def _sample_first(logits, key, temp, topk):
             return _sample_tokens(logits[:, -1], key, temp, topk)
 
+        def _extend_row(q, tokens, row, start, r, wv, av):
+            # partial prefix-cache hit: the entry's row holds a longer
+            # (or equal) prompt — mask it down to its first ``start``
+            # tokens, then push the remaining ``r`` prompt tokens
+            # through the decode path at positions start..start+r-1.
+            # Fixed scan length (prefill_len) with a clamped step index
+            # keeps the shape static: start/r are traced scalars, so
+            # every partial hit shares ONE compiled program; the
+            # clamped tail steps recompute the final token with
+            # identical inputs (idempotent cache writes).  The entry's
+            # pytree is never donated — the cache keeps its rows.
+            self.stats.trace("extend")
+
+            def mask(path, p):
+                if path and path[-1] == "kpos":
+                    return jnp.where(p >= start, EMPTY_POS, p)
+                return p
+
+            row = jax.tree_util.tree_map_with_path(
+                lambda path, p: mask(tuple(
+                    str(getattr(k, "key", k)) for k in path), p), row)
+
+            def step(cache, s):
+                s_eff = jnp.minimum(s, r - 1)
+                tok = jax.lax.dynamic_slice(tokens, (0, start + s_eff),
+                                            (1, 1))
+                logits, cache = lm.decode_step(q, tok, start + s_eff,
+                                               cache, cfg, wv, av)
+                return cache, logits
+
+            row, ys = jax.lax.scan(
+                step, row, jnp.arange(prefill_len, dtype=jnp.int32))
+            return ys[-1], row          # final-token logits (1, 1, V)
+
         self._prefill = jax.jit(_prefill_batch, donate_argnums=(2,))
         self._prefill_row = jax.jit(_prefill_row)
         self._decode_scan = jax.jit(_decode_scan, donate_argnums=(3,))
         self._decode_one = jax.jit(_decode_one, donate_argnums=(3,))
         self._sample_first = jax.jit(_sample_first)
+        self._extend_row = jax.jit(_extend_row)
 
     # ------------------------------------------------------------------
     # Shared plumbing
@@ -282,11 +328,15 @@ class ServeEngine(ServeRuntime):
 
     def submit(self, prompt, *, max_new_tokens: int = 16,
                budget_s: Optional[float] = None, temperature: float = 0.0,
-               top_k: int = 0, prefix=None) -> int:
+               top_k: int = 0, prefix=None,
+               rep_key: Optional[int] = None) -> int:
         """Enqueue a request; returns its id.  ``budget_s`` caps this
         request's precision configuration (None = loosest/most accurate;
         under a FluidController the closed loop may tighten it further).
-        vlm models require ``prefix`` (n_prefix_tokens, d_model)."""
+        vlm models require ``prefix`` (n_prefix_tokens, d_model).
+        ``rep_key`` threads a traffic repetition key to the prefix-cache
+        tier (hits are content-keyed either way; the key feeds the
+        repetition-aware eviction value)."""
         if self.cfg.family not in lm.RAGGED_PREFILL_FAMILIES:
             raise NotImplementedError(
                 f"the continuous-batching API needs ragged prefill; family "
@@ -318,13 +368,22 @@ class ServeEngine(ServeRuntime):
         rid = self.next_rid()
         req = Request(rid, prompt, max_new_tokens,
                       None if budget_s is None else float(budget_s),
-                      float(temperature), int(top_k), prefix=prefix)
+                      float(temperature), int(top_k), prefix=prefix,
+                      rep_key=rep_key)
         record = RequestStats(
             rid=rid,
             budget_s=(float(budget_s) if budget_s is not None
                       else UNCONSTRAINED_BUDGET),
             prompt_len=int(prompt.shape[0]), submitted_s=time.time())
-        return self.new_record(record, req, budget_s)
+        est_scale = 1.0
+        if self._cacheable(req):
+            # admission planner sees the predicted hit: the modeled EDP
+            # is discounted by the predicted cached fraction, so likely
+            # hits admit earlier — they really are cheaper to serve
+            total = prompt.shape[0] + max_new_tokens
+            est_scale = max(total - self.prefix_cache.peek(prompt),
+                            1) / total
+        return self.new_record(record, req, budget_s, est_scale=est_scale)
 
     def _ensure_pool(self) -> lm.CachePool:
         if self.pool is None:
@@ -336,9 +395,19 @@ class ServeEngine(ServeRuntime):
                                      shardings=shardings)
         return self.pool
 
+    def _cacheable(self, req: Request) -> bool:
+        return (self.prefix_cache is not None and req.prefix is None
+                and req.prompt.shape[0] <= self._cache_sc)
+
     def _admit(self) -> List[int]:
-        """Move queued requests into free pool slots (prefill + install),
-        in the runtime's EDP-aware, starvation-free admission order."""
+        """Move queued requests into free pool slots, in the runtime's
+        EDP-aware, starvation-free admission order.  With a prefix
+        cache, each admission consults the tier before prefilling: a
+        full hit installs the cached row and reuses its stored logits
+        (prefill skipped entirely), a partial hit installs the shared
+        prefix and extends the remainder through the decode path, and a
+        miss prefills fresh and stores/refreshes the entry.  Only the
+        miss fraction is charged against a FluidController's window."""
         pool = self._ensure_pool()
         admitted = []
         while self.queued and pool.free_slots:
@@ -346,18 +415,66 @@ class ServeEngine(ServeRuntime):
             slot = pool.alloc()
             S = req.prompt.shape[0]
             record = self.requests[req.rid]
-            wv, av = self.admit_record(record, req.budget_s,
-                                       S + req.max_new_tokens)
+            planned = S + req.max_new_tokens
+            hit = eff = wv_np = av_np = None
+            if self._cacheable(req):
+                # resolve the effective budget's bits HOST-side first:
+                # the precision gate needs them before any charging
+                eff = self.admission_budget(req.budget_s)
+                wv_np, av_np = self.host_bits(eff)
+                hit = self.prefix_cache.lookup(
+                    req.prompt, wv_np, av_np, rep_key=req.rep_key)
+            cached = hit.keep if hit is not None else 0
+            wv, av = self.admit_record(record, req.budget_s, planned,
+                                       eff=eff,
+                                       charge_units=planned - cached)
+            if hit is not None:
+                record.cached_units = cached
+                record.cache_hit = "full" if hit.full else "partial"
+                record.cached_cost = self.price_bits(hit.entry.wbits,
+                                                     hit.entry.abits)
+                record.cached_mean_wbits = float(
+                    np.mean(hit.entry.wbits))
+                self.prefix_cache.ledger.prefill_edp_saved_js += \
+                    record.prefill_edp_saved_js
             tokens = np.zeros((1, self.prefill_len), np.int32)
             tokens[0, :S] = req.prompt
-            extra = (() if req.prefix is None
-                     else (jnp.asarray(req.prefix[None]),))
-            logits, row_cache = self._prefill_row(
-                self.qparams, jnp.asarray(tokens),
-                jnp.asarray([S], jnp.int32), wv, av, *extra)
-            prefix_len = (self.cfg.n_prefix_tokens
-                          if self.cfg.family == "vlm" else 0)
-            pool.write_row(row_cache, slot, S + prefix_len)
+            if hit is not None and hit.full:
+                # full hit: the cached row IS the prefill output at the
+                # entry's bits — install it and reuse its stored logits
+                pool.install_prefix(hit.entry.row_cache, slot, S)
+                logits = hit.entry.logits
+                prefix_len = 0
+            elif hit is not None:
+                # partial hit: install the shared prefix, extend the
+                # rest through the compiled decode-extension program
+                logits, row_cache = self._extend_row(
+                    self.qparams, jnp.asarray(tokens),
+                    hit.entry.row_cache, jnp.asarray(cached, jnp.int32),
+                    jnp.asarray(S - cached, jnp.int32), wv, av)
+                pool.write_row(row_cache, slot, S)
+                prefix_len = 0
+                # refresh only when precision-pure: the extended row
+                # mixes entry bits (prefix) with resolved bits (tail)
+                # unless they match
+                if (np.array_equal(hit.entry.wbits, wv_np)
+                        and np.array_equal(hit.entry.abits, av_np)):
+                    self.prefix_cache.store(
+                        req.prompt, row_cache, logits, wv_np, av_np,
+                        record.ap_cost, rep_key=req.rep_key)
+            else:
+                extra = (() if req.prefix is None
+                         else (jnp.asarray(req.prefix[None]),))
+                logits, row_cache = self._prefill_row(
+                    self.qparams, jnp.asarray(tokens),
+                    jnp.asarray([S], jnp.int32), wv, av, *extra)
+                prefix_len = (self.cfg.n_prefix_tokens
+                              if self.cfg.family == "vlm" else 0)
+                pool.write_row(row_cache, slot, S + prefix_len)
+                if wv_np is not None:   # cacheable miss: store/refresh
+                    self.prefix_cache.store(
+                        req.prompt, row_cache, logits, wv_np, av_np,
+                        record.ap_cost, rep_key=req.rep_key)
             key = self._split_key(1)[0]
             first = self._sample_first(
                 logits, key, jnp.asarray([req.temperature], jnp.float32),

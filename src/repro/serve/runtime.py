@@ -122,6 +122,7 @@ class ServeRuntime:
         self._pending: List[_QueueEntry] = []
         self._config_costs: Optional[List[apm.BitVectorCost]] = None
         self._lats_np: Optional[np.ndarray] = None
+        self._tabs_np: Optional[Tuple[np.ndarray, np.ndarray]] = None
         # scheduler clock + deferred (timestamped) arrivals: submit_at()
         # registers a submit thunk for a future tick; run() drains the
         # due thunks at the top of each tick (trace replay enqueues by
@@ -145,6 +146,16 @@ class ServeRuntime:
                                        np.float32)
         fits = np.nonzero(self._lats_np <= np.float32(budget))[0]
         return int(fits[-1]) if fits.size else 0
+
+    def host_bits(self, budget: float) -> Tuple[np.ndarray, np.ndarray]:
+        """The (wbits, abits) vectors a budget resolves to, as host
+        numpy (stacked tables cached) — the prefix-cache precision gate
+        runs per admission and must not sync device arrays."""
+        if self._tabs_np is None:
+            wtab, atab = self.controller.stacked_tables()
+            self._tabs_np = (np.asarray(wtab), np.asarray(atab))
+        i = self._host_index(budget)
+        return self._tabs_np[0][i], self._tabs_np[1][i]
 
     def _config_cost(self, idx: int) -> apm.BitVectorCost:
         """Priced AP cost of the controller's idx-th stacked config."""
@@ -177,21 +188,36 @@ class ServeRuntime:
                 axis_cost(cost, self.controller.budget_axis, units))
 
     def admit_record(self, record: CostRecord,
-                     requested: Optional[float], units: int
+                     requested: Optional[float], units: int, *,
+                     eff: Optional[float] = None,
+                     charge_units: Optional[int] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Resolve one admission end to end: effective budget → bit
         vectors (pure-data gather) → AP pricing → control-loop charge.
         ``units`` is the admission's *planned* AP unit count (LM: prompt
-        + max new tokens; CNN: 1)."""
-        eff = self.admission_budget(requested)
+        + max new tokens; CNN: 1).  An engine that consulted the prefix
+        cache passes the pre-computed ``eff`` (so the gate and the
+        charge see the same headroom) and ``charge_units`` = the miss
+        fraction — cache-served units are never charged against a
+        FluidController's SLO window, and the avoided share is recorded
+        on the controller for introspection."""
+        if eff is None:
+            eff = self.admission_budget(requested)
         wv, av = self.controller.resolve(jnp.asarray(eff, jnp.float32))
         cost = self.price_bits(wv, av)
         record.budget_s = eff
         record.ap_cost = cost
         record.mean_wbits = float(np.mean(np.asarray(wv, np.float64)))
-        record.planned_units = units
+        record.planned_units = units if charge_units is None \
+            else charge_units
         record.admitted_tick = self._tick
-        self.charge(cost, units)
+        self.charge(cost, record.planned_units)
+        if (charge_units is not None and charge_units != units
+                and isinstance(self.controller, FluidController)):
+            axis = self.controller.budget_axis
+            self.controller.record_saved(
+                axis_cost(cost, axis, units)
+                - axis_cost(cost, axis, charge_units))
         self.stats.admitted += 1
         return wv, av
 
@@ -218,15 +244,21 @@ class ServeRuntime:
     # ------------------------------------------------------------------
 
     def new_record(self, record: CostRecord, payload: object,
-                   requested: Optional[float]) -> int:
-        """Register a submitted request and enqueue it for admission."""
+                   requested: Optional[float], *,
+                   est_scale: float = 1.0) -> int:
+        """Register a submitted request and enqueue it for admission.
+        ``est_scale`` discounts the modeled EDP used for admission
+        ordering — an engine with a prefix cache passes the predicted
+        miss fraction, so predicted hits look cheaper and admit
+        earlier (they really are cheaper: hits skip prefill)."""
         record.submitted_tick = self._tick
         self.requests[record.rid] = record
         est = 0.0
         if self.pricer is not None:
             open_budget = (float(requested) if requested is not None
                            else UNCONSTRAINED_BUDGET)
-            est = self._config_cost(self._host_index(open_budget)).edp
+            est = (self._config_cost(self._host_index(open_budget)).edp
+                   * float(est_scale))
         self._pending.append(_QueueEntry(record.rid, payload, est))
         return record.rid
 

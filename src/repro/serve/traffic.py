@@ -268,7 +268,8 @@ class TraceReplayer:
                     rid = eng.submit(
                         payload_tokens(self.trace, req, eng.cfg.vocab_size),
                         max_new_tokens=req.max_new_tokens,
-                        budget_s=(req.budget if self.use_budgets else None))
+                        budget_s=(req.budget if self.use_budgets else None),
+                        rep_key=req.key)
                     lm_meta[(req.arch, rid)] = req
                 else:
                     cnn_pending[req.arch].append(req)
@@ -386,9 +387,12 @@ def summarize(result: TrafficResult, *, window: int = 8,
     EDP met their per-request ``slo_edp`` metadata — ``None`` when the
     trace carried none), p50/p99 latency in scheduler ticks, p50/p99 and
     total EDP, queue-depth-over-time (series + peak + mean),
-    unserved/starvation counts, and the mean resolved weight bits per
+    unserved/starvation counts, the mean resolved weight bits per
     ``window``-tick arrival window (the bits-degradation time series the
-    elasticity experiments plot)."""
+    elasticity experiments plot), and per-key repetition stats
+    (distinct keys, top-key share, theoretical max hit rate) — the
+    yardstick the prefix-cache tier's achieved hit rate is judged
+    against."""
     entries = result.entries
     fin = [e for e in entries if e["done"]]
     lat = np.asarray([e["latency_ticks"] for e in fin], np.float64)
@@ -412,6 +416,23 @@ def summarize(result: TrafficResult, *, window: int = 8,
     qd = np.asarray(result.queue_depth, np.float64) \
         if result.queue_depth else np.zeros((0,))
     pct = (lambda a, p: float(np.percentile(a, p)) if a.size else 0.0)
+    # per-key repetition stats: sanity-check a trace's repeated mix
+    # against the prefix-cache tier's achieved hit rate — a repeat of
+    # an already-seen key is the theoretical best case for a hit, so
+    # max_hit_rate = (arrivals - distinct keys) / arrivals
+    keys = [e["key"] for e in entries if e.get("key") is not None]
+    key_counts: Dict[int, int] = {}
+    for k in keys:
+        key_counts[k] = key_counts.get(k, 0) + 1
+    n_keys = len(keys)
+    repetition = {
+        "arrivals": n_keys,
+        "distinct_keys": len(key_counts),
+        "top_key_share": (round(max(key_counts.values()) / n_keys, 4)
+                          if n_keys else 0.0),
+        "max_hit_rate": (round((n_keys - len(key_counts)) / n_keys, 4)
+                         if n_keys else 0.0),
+    }
     return {
         "requests": len(entries),
         "completed": len(fin),
@@ -438,4 +459,5 @@ def summarize(result: TrafficResult, *, window: int = 8,
         "arrivals_per_window": arrivals_w,
         "mean_wbits_per_window": [
             round(float(np.mean(b)), 3) if b else None for b in bits_w],
+        "repetition": repetition,
     }

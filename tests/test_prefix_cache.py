@@ -1,0 +1,395 @@
+"""Repetition-aware prefix/KV-cache tier (DESIGN.md §10): content-keyed
+hits are bit-exact, precision-gated, priced for eviction in AP-cost
+terms, charged to the closed loop only for their miss fraction — all
+zero-retrace."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.cache.policy import (CacheLedger, RepetitionAwarePolicy,
+                                hit_allowed)
+from repro.core import policy as pol
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+from repro.serve.prefix_cache import PrefixCache
+
+KEY = jax.random.PRNGKey(4)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = configs.get_smoke("qwen3_4b")
+    params = lm.init_params(cfg, KEY)
+    qparams = lm.quantize_params(params, cfg)
+    return cfg, qparams
+
+
+def _ctrl(cfg):
+    n = lm.n_bit_slots(cfg)
+    return pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 0.5, "int8": 1.0}, n)
+
+
+def _engine(served, cache=None, controller=None, **kw):
+    cfg, qparams = served
+    kw.setdefault("max_len", 64)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("prefill_len", 8)
+    kw.setdefault("decode_block", 4)
+    return ServeEngine(cfg, qparams,
+                       controller=controller or _ctrl(cfg),
+                       prefix_cache=cache, **kw)
+
+
+# ---------------------------------------------------------------------------
+# cache/policy.py units
+# ---------------------------------------------------------------------------
+
+def test_hit_allowed_policies():
+    w8 = np.full((3,), 8)
+    w4 = np.full((3,), 4)
+    # exact: identical vectors only
+    assert hit_allowed("exact", w8, w8, w8, w8)
+    assert not hit_allowed("exact", w8, w8, w4, w4)
+    # at_least: cached precision must dominate elementwise
+    assert hit_allowed("at_least", w8, w8, w4, w4)
+    assert not hit_allowed("at_least", w4, w4, w8, w8)
+    assert not hit_allowed("at_least", w8, w4, w8, w8)   # abits too low
+    # repriced: anything goes (the record carries the cached cost)
+    assert hit_allowed("repriced", w4, w4, w8, w8)
+    with pytest.raises(ValueError, match="hit policy"):
+        hit_allowed("sometimes", w8, w8, w8, w8)
+
+
+def test_eviction_is_value_ordered_and_deterministic():
+    """Lowest repetition-weighted recompute EDP evicts first; ties break
+    by insertion order — the same sequence always evicts the same keys."""
+    def run():
+        cache = PrefixCache(chunk=4, capacity=2, hit_policy="at_least")
+        w = np.full((2,), 8)
+        cost = _FakeCost(1.0, 1.0)
+        rows = {}
+        for i, count in [(0, 3), (1, 1), (2, 2)]:
+            toks = np.arange(i * 10, i * 10 + 6, dtype=np.int32)
+            for _ in range(count):       # observed repetitions -> value
+                cache.policy.observe(cache.content_key(toks))
+            cache.store(toks, rows, None, w, w, cost)
+        return sorted(int(e.tokens[0]) for e in cache.entries.values())
+
+    # key 1 (count 1) is the cheapest resident when key 2 arrives
+    assert run() == [0, 20]
+    assert run() == run()
+    # a low-value newcomer is rejected instead of evicting a hot entry
+    cache = PrefixCache(chunk=4, capacity=1, hit_policy="at_least")
+    w = np.full((2,), 8)
+    hot = np.arange(6, dtype=np.int32)
+    for _ in range(5):
+        cache.policy.observe(cache.content_key(hot))
+    cache.store(hot, {}, None, w, w, _FakeCost(1.0, 1.0))
+    assert not cache.store(np.arange(50, 56, dtype=np.int32), {}, None,
+                           w, w, _FakeCost(1.0, 1.0))
+    assert cache.ledger.rejected == 1 and cache.ledger.evictions == 0
+
+
+class _FakeCost:
+    def __init__(self, energy_j, latency_s):
+        self.energy_j = energy_j
+        self.latency_s = latency_s
+
+
+# ---------------------------------------------------------------------------
+# CachePool row primitives (models/lm.py)
+# ---------------------------------------------------------------------------
+
+def test_pool_install_validation(served):
+    cfg, qparams = served
+    pool = lm.CachePool(cfg, 2, 16)
+    n = lm.n_bit_slots(cfg)
+    wv = np.full((n,), 8)
+    toks = np.zeros((1, 8), np.int32)
+    _, row = lm.prefill(qparams, {"tokens": toks}, cfg, wv, wv,
+                        lm.empty_cache(cfg, 1, 16),
+                        lengths=np.asarray([8]))
+    slot = pool.alloc()
+    with pytest.raises(ValueError, match="not in"):
+        pool.write_row(row, slot, 17)                # length > max_len
+    with pytest.raises(ValueError, match="out of range"):
+        pool.write_row(row, 5, 8)
+    free = pool._free[-1]
+    with pytest.raises(ValueError, match="free"):
+        pool.install_prefix(row, free, 8)            # unallocated slot
+    with pytest.raises(ValueError, match="free"):
+        pool.copy_row(free, slot)                    # free source
+    pool.write_row(row, slot, 8)
+    with pytest.raises(ValueError, match="free"):
+        pool.copy_row(slot, free)                    # free destination
+
+
+def test_install_prefix_row_exact_and_copy_row(served):
+    """A full-length install_prefix lands the exact same device row as
+    write_row; copy_row duplicates it bit for bit."""
+    cfg, qparams = served
+    pool_a = lm.CachePool(cfg, 2, 16)
+    pool_b = lm.CachePool(cfg, 2, 16)
+    n = lm.n_bit_slots(cfg)
+    wv = np.full((n,), 8)
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (1, 8)).astype(np.int32)
+    _, row = lm.prefill(qparams, {"tokens": toks}, cfg, wv, wv,
+                        lm.empty_cache(cfg, 1, 16),
+                        lengths=np.asarray([8]))
+    sa, sb = pool_a.alloc(), pool_b.alloc()
+    pool_a.write_row(row, sa, 8)
+    pool_b.install_prefix(row, sb, 8)
+    for pa, pb in zip(jax.tree.leaves(pool_a.cache),
+                      jax.tree.leaves(pool_b.cache)):
+        np.testing.assert_array_equal(np.asarray(pa[:, sa]),
+                                      np.asarray(pb[:, sb]))
+    dst = pool_a.alloc()
+    pool_a.copy_row(sa, dst)
+    assert pool_a.lengths[dst] == pool_a.lengths[sa] == 8
+    for p in jax.tree.leaves(pool_a.cache):
+        np.testing.assert_array_equal(np.asarray(p[:, sa]),
+                                      np.asarray(p[:, dst]))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: bit-exact hits under every policy, zero-retrace
+# ---------------------------------------------------------------------------
+
+def _tokens(served, eng, prompt, budget):
+    rid = eng.submit(prompt, max_new_tokens=4, budget_s=budget)
+    return eng.run()[rid].tokens
+
+
+def test_full_hit_bit_exact_and_zero_retrace(served):
+    """miss -> full hit -> partial hit, every output identical to a
+    fresh cache-less engine; prefill/decode/extend compile once each."""
+    cfg, _ = served
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    ext = np.concatenate([base[:4],
+                          rng.integers(0, cfg.vocab_size, (3,))]
+                         ).astype(np.int32)
+    cache = PrefixCache(chunk=4, capacity=8, hit_policy="at_least")
+    eng = _engine(served, cache=cache)
+    fresh = _engine(served)
+    for prompt in (base, base, ext):     # miss, full hit, partial hit
+        assert (_tokens(served, eng, prompt, 10.0)
+                == _tokens(served, fresh, prompt, 10.0))
+    led = cache.ledger
+    assert (led.hits, led.partial_hits, led.misses) == (1, 1, 1)
+    assert led.hit_tokens == 8 + 4
+    assert eng.stats.prefill_traces == 1
+    assert eng.stats.decode_traces == 1
+    assert eng.stats.extend_traces == 1
+    assert fresh.stats.extend_traces == 0
+
+
+def test_hit_policy_exact_refreshes_on_precision_change(served):
+    """exact: an int8 entry cannot serve an int4 request — the miss
+    re-prefills and refreshes the entry at the new precision."""
+    cfg, _ = served
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, (6,)).astype(np.int32)
+    cache = PrefixCache(chunk=4, capacity=8, hit_policy="exact")
+    eng = _engine(served, cache=cache)
+    _tokens(served, eng, prompt, 10.0)               # miss, stored @ int8
+    _tokens(served, eng, prompt, 0.4)                # int4: exact miss
+    assert cache.ledger.misses == 2
+    assert cache.ledger.refreshes == 1               # entry now int4
+    _tokens(served, eng, prompt, 0.4)                # int4 now hits
+    assert cache.ledger.hits == 1
+    [entry] = cache.entries.values()
+    assert entry.wbits.max() == 4
+
+
+def test_hit_policy_at_least_serves_lower_precision(served):
+    """at_least: an int8 entry serves an int4 request (row carries MORE
+    precision than asked); an int4 entry never serves int8."""
+    cfg, _ = served
+    rng = np.random.default_rng(5)
+    p8 = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    p4 = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    cache = PrefixCache(chunk=4, capacity=8, hit_policy="at_least")
+    eng = _engine(served, cache=cache)
+    _tokens(served, eng, p8, 10.0)                   # stored @ int8
+    _tokens(served, eng, p8, 0.4)                    # int4 request: HIT
+    assert cache.ledger.hits == 1
+    rec = max(eng.requests.values(), key=lambda r: r.rid)
+    assert rec.cache_hit == "full"
+    assert rec.cached_mean_wbits == 8.0              # served from int8 row
+    _tokens(served, eng, p4, 0.4)                    # stored @ int4
+    _tokens(served, eng, p4, 10.0)                   # int8 request: miss
+    assert cache.ledger.misses == 3
+    assert cache.ledger.refreshes == 1
+
+
+def test_hit_policy_repriced_always_hits_and_records_cost(served):
+    cfg, _ = served
+    prompt = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (6,)).astype(np.int32)
+    cache = PrefixCache(chunk=4, capacity=8, hit_policy="repriced")
+    eng = _engine(served, cache=cache)
+    _tokens(served, eng, prompt, 0.4)                # stored @ int4
+    toks = _tokens(served, eng, prompt, 10.0)        # int8 request: hit
+    assert cache.ledger.hits == 1
+    rec = max(eng.requests.values(), key=lambda r: r.rid)
+    assert rec.cache_hit == "full" and rec.cached_mean_wbits == 4.0
+    assert rec.cached_cost is not None
+    assert rec.cached_cost.energy_j < rec.ap_cost.energy_j
+    # repriced reuse serves the int4-prefilled row and its stored
+    # logits: the FIRST token is the int4 serve's, whatever bits the
+    # requester resolved (decode then continues at the requester's bits)
+    assert toks[0] == _tokens(served, _engine(served), prompt, 0.4)[0]
+
+
+def test_ledger_invariant_and_aggregate(served):
+    """Every cacheable admission is exactly one of hit/partial/miss, and
+    the runtime aggregate mirrors the tier's ledger."""
+    from repro.serve.accounting import aggregate
+
+    cfg, _ = served
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(3)]
+    cache = PrefixCache(chunk=4, capacity=8, hit_policy="at_least")
+    eng = _engine(served, cache=cache)
+    order = [0, 1, 0, 2, 1, 0]
+    for i in order:
+        eng.submit(prompts[i], max_new_tokens=4, rep_key=i)
+    eng.run()
+    led = cache.ledger
+    assert led.lookups == led.hits + led.partial_hits + led.misses
+    assert led.lookups == eng.stats.admitted == len(order)
+    assert led.hits == 3                             # every repeat hits
+    # repetition counts are keyed by the threaded rep_key
+    assert [cache.policy.count(i) for i in range(3)] == [3, 2, 1]
+    agg = aggregate(eng.requests.values())
+    assert agg["prefix_hits"] == 3
+    assert agg["prefix_hit_rate"] == 0.5
+    assert agg["cached_units"] == 3 * 6 == led.hit_tokens
+    assert agg["prefill_edp_saved_js"] == pytest.approx(
+        led.prefill_edp_saved_js)
+    assert agg["ap_units"] == sum(r.processed_tokens
+                                  for r in eng.requests.values()) - 18
+
+
+def test_admission_planner_prefers_predicted_hits(served):
+    """submit() discounts a predicted hit's modeled EDP, so it outranks
+    an identically-budgeted unknown prompt in the admission queue."""
+    cfg, _ = served
+    rng = np.random.default_rng(13)
+    known = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    unknown = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    cache = PrefixCache(chunk=4, capacity=8, hit_policy="at_least")
+    eng = _engine(served, cache=cache, n_slots=1)
+    _tokens(served, eng, known, 10.0)                # stored
+    r_unk = eng.submit(unknown, max_new_tokens=4, budget_s=10.0)
+    r_known = eng.submit(known, max_new_tokens=4, budget_s=10.0)
+    ests = {e.rid: e.est_edp for e in eng._pending}
+    assert ests[r_known] < ests[r_unk]
+    assert eng.next_admission().rid == r_known       # hit admits first
+
+
+def test_fluid_controller_charges_only_miss_fraction(served):
+    """A full hit charges (planned - cached) units against the SLO
+    window; the avoided share lands on controller.saved, buying later
+    admissions higher bits than a cache-less run at the same SLO."""
+    from repro.serve.accounting import axis_cost
+
+    cfg, _ = served
+    n = lm.n_bit_slots(cfg)
+    prompt = np.random.default_rng(17).integers(
+        0, cfg.vocab_size, (8,)).astype(np.int32)
+    cfgs = {"int4": pol.fixed(4), "int8": pol.fixed(8)}
+    preds = {"int4": 1e-10, "int8": 1e-8}
+
+    def fluid():
+        return pol.FluidController(cfgs, dict(preds), n, budget_axis="edp",
+                                   slo=1e30, window=64)
+
+    cache = PrefixCache(chunk=4, capacity=8, hit_policy="at_least")
+    eng = _engine(served, cache=cache, controller=fluid())
+    plain = _engine(served, controller=fluid())
+    for e in (eng, plain):
+        rid = e.submit(prompt, max_new_tokens=4)
+        e.run()
+        rid2 = e.submit(prompt, max_new_tokens=4)
+        e.run()
+    rec = eng.requests[rid2]
+    assert rec.cache_hit == "full" and rec.cached_units == 8
+    assert rec.planned_units == 4                    # miss fraction only
+    assert plain.requests[rid2].planned_units == 12
+    # spend differs by exactly the cached share, which is what saved says
+    delta = plain.controller.spent - eng.controller.spent
+    assert eng.controller.saved == pytest.approx(delta)
+    assert eng.controller.saved == pytest.approx(
+        axis_cost(rec.ap_cost, "edp", 12) - axis_cost(rec.ap_cost, "edp", 4))
+    # the hit request's own books: no prefill spend, full counterfactual
+    assert rec.ap_units == 4
+    assert rec.prefill_edp_js == 0.0
+    assert rec.prefill_edp_saved_js > 0.0
+
+
+def test_summarize_reports_repetition_stats():
+    from repro.serve import traffic as tf
+
+    trace = tf.synth_trace("poisson", ticks=32, rate=1.5, seed=7,
+                           repetition=0.7)
+    keys = [r.key for r in trace.requests]
+    distinct = len(set(keys))
+    res = tf.TrafficResult(
+        entries=[{"rid": i, "workload": "lm", "arch": "a", "key": k,
+                  "done": True, "submitted_tick": 0, "latency_ticks": 1,
+                  "edp": 0.0, "energy_j": 0.0, "mean_wbits": 8.0,
+                  "slo_edp": None, "attained": False, "starved": False}
+                 for i, k in enumerate(keys)],
+        queue_depth=[0], active_depth=[0], ticks=1, unserved=0)
+    rep = res.report()["repetition"]
+    assert rep["arrivals"] == len(keys)
+    assert rep["distinct_keys"] == distinct
+    assert rep["max_hit_rate"] == round((len(keys) - distinct)
+                                        / len(keys), 4)
+    assert 0.0 < rep["top_key_share"] <= 1.0
+
+
+def test_ledger_as_dict_roundtrip():
+    led = CacheLedger(hits=3, partial_hits=1, misses=2, refreshes=1,
+                      hit_tokens=20, computed_tokens=10)
+    d = led.as_dict()
+    assert d["lookups"] == 6
+    assert d["hit_rate"] == round(4 / 6, 4)
+    assert d["hit_tokens"] == 20
+
+
+def test_eviction_unregisters_prefixes():
+    """An evicted entry's chunk prefixes stop matching — no dangling
+    partial hits into freed rows."""
+    cache = PrefixCache(chunk=4, capacity=1, hit_policy="at_least")
+    w = np.full((2,), 8)
+    a = np.arange(8, dtype=np.int32)
+    b = np.arange(100, 108, dtype=np.int32)
+    cache.store(a, {}, None, w, w, _FakeCost(1.0, 1.0))
+    assert cache.peek(a) == 8
+    for _ in range(3):                   # make b clearly more valuable
+        cache.policy.observe(cache.content_key(b))
+    cache.store(b, {}, None, w, w, _FakeCost(1.0, 1.0))
+    assert cache.ledger.evictions == 1
+    assert cache.peek(a) == 0                        # fully unregistered
+    assert cache.peek(np.concatenate([a[:4], a[:2]])) == 0
+    assert cache.peek(b) == 8
+
+
+def test_repetition_policy_capacity_bound():
+    p = RepetitionAwarePolicy(capacity=2)
+    for k in range(10):
+        p.observe(bytes([k]))
+    assert len(p.counts) == 10           # counts persist past capacity:
+                                         # rejected keys keep earning value
+    admit, victim = p.plan(5.0, {b"x": (1.0, 0), b"y": (2.0, 1)})
+    assert admit and victim == b"x"      # lowest value evicts
+    admit, victim = p.plan(0.5, {b"x": (1.0, 0), b"y": (2.0, 1)})
+    assert not admit and victim is None  # newcomer too cheap
