@@ -8,8 +8,9 @@ wins), applied to each module's curated ``metrics`` dict plus its
 ``rc``:
 
 * ``rc`` — HARD: a module that passed at baseline must still pass.
-* ``*attainment*`` / ``*hit_rate*`` — HARD: must-not-drop floors (SLO
-  attainment; the prefix-cache tier's deterministic hit rate).
+* ``*attainment*`` / ``*hit_rate*`` / ``*accept_rate*`` — HARD:
+  must-not-drop floors (SLO attainment; the prefix-cache tier's
+  deterministic hit rate; speculative decoding's draft accept rate).
 * relative throughput (``*speedup*`` / ``*geomean*`` /
   ``*throughput*`` — machine-relative ratios) — HARD: may regress at
   most 15%.
@@ -95,7 +96,8 @@ def classify(path: str) -> str:
         return "time"
     if leaf == "rc":
         return "rc"
-    if "attainment" in leaf or "hit_rate" in leaf:
+    if ("attainment" in leaf or "hit_rate" in leaf
+            or "accept_rate" in leaf):
         return "attainment"
     if any(leaf.endswith(k) for k in RATE_KEYS):
         return "rate"

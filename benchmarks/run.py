@@ -35,7 +35,7 @@ def main(argv=None) -> int:
     from benchmarks import (calibrate, cnn_serve, fig5_runtimes,
                             fig6_technology, fig7_dse, fig8_breakdown,
                             grouped_dispatch, prefix_cache, roofline,
-                            serve_runtime, serve_throughput,
+                            serve_runtime, serve_throughput, spec_decode,
                             table7_bitfluid, table8_sota,
                             traffic_elasticity)
     mods = [
@@ -52,6 +52,7 @@ def main(argv=None) -> int:
         ("serve_runtime", serve_runtime),
         ("traffic_elasticity", traffic_elasticity),
         ("prefix_cache", prefix_cache),
+        ("spec_decode", spec_decode),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))

@@ -9,6 +9,11 @@ accelerators), and (b) per-request precision (a (B, n_layers) bit matrix
 driving the vmapped row path) prices in at smoke scale while keeping one
 compiled program.
 
+Throughput is also split into prefill vs decode tok/s per batch size
+(two-point timing: a steps=1 run isolates the prefill phase, the
+marginal cost of the remaining steps is pure decode) — the phase rates
+the speculative-decoding benchmark's tokens/AP-second model rides on.
+
 Claim checked (rc != 0 on failure): fused decode beats the Python loop
 by >= 1.1x in geometric mean across batch sizes (the per-B speedup is
 dispatch-bound, so it is largest at small B and noisier at large B on
@@ -33,7 +38,8 @@ LAST_RESULTS: dict = {}
 REPS = 3
 
 
-def _bench(eng, batch, steps, *, fused, reps=REPS):
+def _bench_s(eng, batch, steps, *, fused, reps=REPS):
+    """Best-of-N wall seconds for one generate() call (prefill + steps)."""
     out = eng.generate(batch, steps, fused=fused)     # warm the traces
     np.asarray(out)
     best = float("inf")
@@ -41,7 +47,27 @@ def _bench(eng, batch, steps, *, fused, reps=REPS):
         t0 = time.perf_counter()                      # are noisy neighbors
         np.asarray(eng.generate(batch, steps, fused=fused))
         best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench(eng, batch, steps, *, fused, reps=REPS):
+    best = _bench_s(eng, batch, steps, fused=fused, reps=reps)
     return batch["tokens"].shape[0] * steps / best
+
+
+def _phase_split(eng, batch, steps, *, fused, reps=REPS):
+    """Split throughput into prefill vs decode tok/s by two-point
+    timing: a steps=1 run is prefill + one sampled token (the prefill
+    phase), and the marginal time for the remaining steps-1 tokens is
+    pure decode.  Noisy hosts can invert the subtraction — fall back to
+    the combined rate rather than report a negative."""
+    B = batch["tokens"].shape[0]
+    t1 = _bench_s(eng, batch, 1, fused=fused, reps=reps)
+    tn = _bench_s(eng, batch, steps, fused=fused, reps=reps)
+    prefill = B * batch["tokens"].shape[1] / t1
+    decode = (B * (steps - 1) / (tn - t1) if tn > t1
+              else B * steps / tn)
+    return prefill, decode, B * steps / tn
 
 
 def main(full: bool = True) -> int:
@@ -70,14 +96,18 @@ def main(full: bool = True) -> int:
         batch = {"tokens": jax.random.randint(key, (B, PROMPT), 0,
                                               cfg.vocab_size)}
         eng.set_budget(10.0)                          # fixed int8, (L,) bits
-        fixed_fused = _bench(eng, batch, steps, fused=True, reps=reps)
+        prefill_rate, decode_rate, fixed_fused = _phase_split(
+            eng, batch, steps, fused=True, reps=reps)
         fixed_loop = _bench(eng, batch, steps, fused=False, reps=reps)
         results[B] = {
             "fixed_int8_fused_tok_s": round(fixed_fused, 1),
             "fixed_int8_loop_tok_s": round(fixed_loop, 1),
             "fused_speedup_vs_loop": round(fixed_fused / fixed_loop, 2),
+            "prefill_tok_s": round(prefill_rate, 1),
+            "decode_tok_s": round(decode_rate, 1),
         }
-        line = (f"B={B:>2}: fused {fixed_fused:8.1f} tok/s | loop "
+        line = (f"B={B:>2}: fused {fixed_fused:8.1f} tok/s (prefill "
+                f"{prefill_rate:8.1f} / decode {decode_rate:8.1f}) | loop "
                 f"{fixed_loop:8.1f} tok/s ({fixed_fused / fixed_loop:4.2f}x)")
         if full:
             # per-request budgets: alternate int8/int4 rows, (B, L) bit

@@ -2,7 +2,8 @@
 
 The CLI front end of the trace-driven traffic harness (DESIGN.md §9):
 synthesize a seeded arrival schedule (``--trace poisson | diurnal |
-spike``), register every arrival with ``ServeRuntime.submit_at`` (the
+spike | mmpp``, or ``--trace file --trace-file arrivals.jsonl`` to
+import one), register every arrival with ``ServeRuntime.submit_at`` (the
 runtime enqueues it when its scheduler clock reaches the arrival tick —
 never all-up-front), pump ``run()``, and print the collector's report:
 SLO attainment, p50/p99 latency (scheduler ticks) and EDP, queue depth
@@ -17,6 +18,8 @@ SLO (budget per N scheduler ticks — the diurnal experiment's shape).
 
   PYTHONPATH=src python launch/serve.py --trace spike --ticks 24 --rate 0.8
   PYTHONPATH=src python launch/serve.py --trace diurnal --window-ticks 6
+  PYTHONPATH=src python launch/serve.py --trace mmpp --ticks 48 --rate 0.5
+  PYTHONPATH=src python launch/serve.py --trace file --trace-file t.jsonl
   PYTHONPATH=src python launch/serve.py --trace poisson --open --out rep.json
 """
 from __future__ import annotations
@@ -57,7 +60,15 @@ def build_engine(cfg, qparams, n, *, slo, window, window_ticks, optimism,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--trace", default="spike",
-                    choices=("poisson", "diurnal", "spike"))
+                    choices=("poisson", "diurnal", "spike", "mmpp",
+                             "file"))
+    ap.add_argument("--trace-file", default=None,
+                    help="JSONL arrival schedule for --trace file "
+                         "(one {'t': tick, ...} object per line)")
+    ap.add_argument("--mmpp-up", type=float, default=0.08,
+                    help="mmpp calm→bursty transition probability")
+    ap.add_argument("--mmpp-down", type=float, default=0.25,
+                    help="mmpp bursty→calm transition probability")
     ap.add_argument("--ticks", type=int, default=24)
     ap.add_argument("--rate", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
@@ -103,8 +114,10 @@ def main(argv=None) -> int:
     trace = tf.synth_trace(
         args.trace, ticks=args.ticks, rate=args.rate, seed=args.seed,
         repetition=args.repetition, burst_mag=args.burst_mag,
-        burst_len=args.burst_len, depth=args.depth, lm_archs=(args.arch,),
-        prompt_len=args.prompt_len, max_new_tokens=args.max_new)
+        burst_len=args.burst_len, depth=args.depth,
+        mmpp_up=args.mmpp_up, mmpp_down=args.mmpp_down,
+        lm_archs=(args.arch,), prompt_len=args.prompt_len,
+        max_new_tokens=args.max_new, path=args.trace_file)
     print(f"trace: {args.trace}, {trace.n_requests} requests over "
           f"{trace.ticks} ticks (seed {args.seed})")
 

@@ -22,10 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.apsim import costmodel as cmod
 from repro.apsim.energy import TechParams, SRAM
 from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, _gemm_layer, area_mm2
 from repro.apsim.workloads import Layer, fc, gemm_layers
@@ -110,7 +112,8 @@ def _clamp_bits(b) -> int:
 def gemv_cost(K: int, N: int, Mw: int, Ma: int, *,
               cfg: BFIMNAConfig = LR_CONFIG,
               tech: TechParams = SRAM) -> Tuple[float, float]:
-    """(cycles, energy_j) of one serve GEMV (1, K) @ (K, N) at (Mw, Ma).
+    """(cycles, energy_j) of one serve GEMV (1, K) @ (K, N) at (Mw, Ma),
+    under the paper's batch-size-1 CNN mapping (``mapper._gemm_layer``).
 
     Cached: uniform bit vectors price every layer to the same (K, N, Mw,
     Ma) tuples, so per-request admission pays the analytic mapping once
@@ -118,6 +121,85 @@ def gemv_cost(K: int, N: int, Mw: int, Ma: int, *,
     rep = _gemm_layer(cfg, tech, fc(f"gemv_{K}x{N}", K, N, relu=False),
                       Mw, Ma)
     return rep.cycles, rep.energy_j
+
+
+@functools.lru_cache(maxsize=8192)
+def serve_gemv_cost(K: int, N: int, Mw: int, Ma: int, u: int = 1, *,
+                    cfg: BFIMNAConfig = LR_CONFIG,
+                    tech: TechParams = SRAM) -> Tuple[float, float]:
+    """(cycles, energy_j) of a serve GEMM (u, K) @ (K, N) at (Mw, Ma)
+    under the latency-optimal *decode* mapping.
+
+    The paper mapping (:func:`gemv_cost`) packs ``opc`` output blocks per
+    CAP and charges their reductions sequentially — correct when a layer's
+    blocks fill every CAP (the Table V-VII CNN regime), but a serve GEMV
+    has only N·u output blocks for 4096 CAPs, so almost every CAP is idle
+    and each holds a single block.  Two refinements, both only meaningful
+    in that underutilized regime (at full occupancy they reduce to the
+    paper mapping, which keeps the calibrated CNN tables byte-identical):
+
+    * **occupancy-aware reduction**: a CAP only reduces the blocks it
+      actually holds — ``min(opc, ceil(blocks / n_caps))``, not ``opc``;
+    * **latency-optimal fold**: with idle CAPs available the mapper may
+      split one block's K products over ``f`` CAPs (the existing
+      ``j_fold`` mechanism), shrinking the in-CAP chain to ``ceil(K/f)-1``
+      adds at the cost of ``ceil(log2 f)`` cross-CAP partial-sum merge
+      rounds (charged per round, unlike the paper path's single round,
+      i.e. strictly *more* conservative per fold) and ``f``× activation
+      streaming energy.  The fold is chosen by exhaustive argmin over
+      modeled cycles; energy is reported at the chosen fold.
+
+    Under this mapping decode latency is genuinely bit-dependent (the
+    4·Mw·Ma multiply passes dominate once the chain is short) and a
+    ``u``-token verify chunk amortizes the pass over u tokens — the two
+    properties bit-fluid speculative decoding prices against.
+    """
+    i, j = N, K
+    best: Optional[Tuple[float, float]] = None
+    max_f = min(j, 256)
+    for f in range(1, max_f + 1):
+        j_sub = math.ceil(j / f)
+        if j_sub > cfg.cap_rows - 1:
+            continue
+        opc = max(1, (cfg.cap_rows - 1) // j_sub)
+        total_blocks = i * u * f
+        steps = math.ceil(total_blocks / (cfg.n_caps * opc))
+        occ = min(opc, math.ceil(total_blocks / cfg.n_caps))
+        per_step = cmod.Cost()
+        per_step.writes += Ma                        # stream activations
+        passes = 4 * Mw * Ma                         # bit-serial multiply
+        per_step.compares += passes
+        per_step.writes += passes
+        seq_adds = occ * max(j_sub - 1, 0)           # resident blocks only
+        per_step.compares += 4 * seq_adds
+        per_step.writes += 4 * seq_adds
+        per_step.word_ops += occ
+        cycles = steps * per_step.cycles(tech) + Mw * tech.write_cycles
+        width = Mw + Ma + math.log2(max(j, 2))
+        if f > 1:                                    # cross-CAP merges,
+            merge_rounds = math.ceil(math.log2(f))   # charged per round
+            cycles += steps * merge_rounds * 8 * width * tech.write_cycles * 0.5
+        out_bits_elem = Mw + Ma + math.ceil(math.log2(max(j, 2)))
+        out_bits = i * u * out_bits_elem
+        cycles += cfg.mesh.transfer_latency_s(out_bits) * cfg.freq_hz
+        # ---- energy at this fold (same accounting as _gemm_layer) ------
+        comp = cmod.rt_matmat(i, j, u, Mw, Ma, mode="2d",
+                              parallel_blocks=cfg.n_caps * opc)
+        energy = comp.energy_j(tech)
+        in_bits = j * u * Ma * f
+        w_bits = i * j * Mw
+        move_bits = in_bits + w_bits + out_bits
+        energy += cfg.mesh.transfer_energy_j(move_bits)
+        energy += 2.0 * i * u * out_bits_elem * (tech.e_write_j
+                                                 + tech.e_read_j) / 2.0
+        if f > 1:                                    # partial-sum merge adds
+            energy += (f - 1) * i * u * cmod.rt_add(
+                math.ceil(width), 2, populate=False, readout=False
+            ).energy_j(tech)
+        if best is None or cycles < best[0]:
+            best = (cycles, energy)
+    assert best is not None
+    return best
 
 
 @functools.lru_cache(maxsize=4096)
@@ -144,16 +226,20 @@ def network_gemms(layers: Sequence[Layer]) -> Tuple[Tuple[Layer, ...], ...]:
 def price_bit_vector(gemms: Sequence[Sequence],
                      wvec: Sequence[int], avec: Sequence[int], *,
                      head: Optional[Tuple[int, int]] = None,
+                     units: int = 1,
                      cfg: BFIMNAConfig = LR_CONFIG,
                      tech: TechParams = SRAM) -> BitVectorCost:
     """Price a resolved per-layer bit vector against its model's GEMMs.
 
     ``gemms``: one sequence of GEMM descriptors per bit slot — (K, N)
-    pairs for serve GEMVs (see ``lm.layer_gemm_dims``) or workload
+    pairs for serve GEMVs (see ``lm.layer_gemm_dims``), priced under the
+    latency-optimal decode mapping (:func:`serve_gemv_cost`), or workload
     :class:`Layer` records for full conv/fc GEMMs (see
-    :func:`network_gemms`); ``head``, when given, is priced at the last
-    slot's bits (the logits-GEMM rule) and appended as a trailing entry.
-    Bits clamp into [1, 16] (>= 16 is the fp sentinel).
+    :func:`network_gemms`), priced under the paper mapping; ``head``,
+    when given, is priced at the last slot's bits (the logits-GEMM rule)
+    and appended as a trailing entry.  Bits clamp into [1, 16] (>= 16 is
+    the fp sentinel).  ``units`` batches every (K, N) GEMV over u tokens
+    (the speculative verify chunk) — Layer items reject units != 1.
     """
     if len(wvec) != len(gemms) or len(avec) != len(gemms):
         raise ValueError(
@@ -161,19 +247,21 @@ def price_bit_vector(gemms: Sequence[Sequence],
             f"model's {len(gemms)} bit slots")
     cyc, en = [], []
     for dims, w, a in zip(gemms, wvec, avec):
-        c, e = _slot_cost(dims, _clamp_bits(w), _clamp_bits(a), cfg, tech)
+        c, e = _slot_cost(dims, _clamp_bits(w), _clamp_bits(a), cfg, tech,
+                          units)
         cyc.append(c)
         en.append(e)
     if head is not None:
-        ci, ei = gemv_cost(head[0], head[1], _clamp_bits(wvec[-1]),
-                           _clamp_bits(avec[-1]), cfg=cfg, tech=tech)
+        ci, ei = serve_gemv_cost(head[0], head[1], _clamp_bits(wvec[-1]),
+                                 _clamp_bits(avec[-1]), units,
+                                 cfg=cfg, tech=tech)
         cyc.append(ci)
         en.append(ei)
     return BitVectorCost(tuple(cyc), tuple(en), cfg.freq_hz)
 
 
 def _slot_cost(dims: Sequence, Mw: int, Ma: int, cfg: BFIMNAConfig,
-               tech: TechParams) -> Tuple[float, float]:
+               tech: TechParams, units: int = 1) -> Tuple[float, float]:
     """(cycles, energy_j) of one bit slot's GEMM descriptors at (Mw, Ma).
 
     Single accumulation point for both the per-vector and per-matrix
@@ -182,10 +270,15 @@ def _slot_cost(dims: Sequence, Mw: int, Ma: int, cfg: BFIMNAConfig,
     c = e = 0.0
     for item in dims:
         if isinstance(item, Layer):
+            if units != 1:
+                raise ValueError(
+                    "chunked pricing (units != 1) only applies to serve "
+                    "GEMV slots, not full conv/fc Layer slots")
             ci, ei = layer_gemm_cost(item, Mw, Ma, cfg=cfg, tech=tech)
         else:
             K, N = item
-            ci, ei = gemv_cost(K, N, Mw, Ma, cfg=cfg, tech=tech)
+            ci, ei = serve_gemv_cost(K, N, Mw, Ma, units, cfg=cfg,
+                                     tech=tech)
         c += ci
         e += ei
     return c, e
@@ -234,8 +327,8 @@ def price_bit_matrix(gemms: Sequence[Sequence], wmat, amat, *,
             cyc_tab[pi, s], en_tab[pi, s] = _slot_cost(
                 dims, int(Mw), int(Ma), cfg, tech)
         if head is not None:
-            head_tab[pi] = gemv_cost(head[0], head[1], int(Mw), int(Ma),
-                                     cfg=cfg, tech=tech)
+            head_tab[pi] = serve_gemv_cost(head[0], head[1], int(Mw),
+                                           int(Ma), cfg=cfg, tech=tech)
     cyc = cyc_tab[inv, np.arange(L)[None, :]]            # (B, L) gathers
     en = en_tab[inv, np.arange(L)[None, :]]
     out: List[BitVectorCost] = []

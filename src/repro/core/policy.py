@@ -316,6 +316,32 @@ class FluidController(BudgetController):
         self.served = 0
         self.ticks = 0
 
+    # Draft depths the closed loop can hand out, slowest-headroom first.
+    DRAFT_DEPTHS = (0, 2, 4, 8)
+
+    def draft_depth(self) -> int:
+        """Speculative draft depth for the next admission, from SLO
+        headroom.  Drafting spends extra budget-axis units now (k draft
+        tokens + a (k+1)-wide verify per round) to buy latency later, so
+        depth scales with the *fraction* of the window budget this
+        admission's share represents: a window with plenty of slack
+        drafts deep (k=8), a tight one shallow, and a window in debt
+        falls back to k=0 — exactly today's non-speculative path, so the
+        closed loop degrades gracefully under pressure (DESIGN.md §11).
+        """
+        if self.slo == float("inf"):
+            return self.DRAFT_DEPTHS[-1]
+        if self.slo <= 0:
+            return 0
+        frac = max(self.slo - self.spent, 0.0) / self.slo
+        if frac >= 0.5:
+            return 8
+        if frac >= 0.25:
+            return 4
+        if frac >= 0.10:
+            return 2
+        return 0
+
     def record_saved(self, amount: float) -> None:
         """Track budget-axis cost a cache hit avoided charging.  The
         SLO window itself only ever sees the miss fraction (that's the

@@ -115,6 +115,33 @@ def bit_families(fams: Sequence[int]):
         _families = prev
 
 
+_token_scales = False
+
+
+@contextlib.contextmanager
+def token_scale_mode():
+    """Per-token activation scales in the per-row serve path (trace-time).
+
+    The default per-row path reduces activation amax over every axis past
+    the batch axis — one scale per request, exactly what a ``(B, 1, K)``
+    single-token decode step computes.  A speculative verify chunk runs
+    ``(B, U, K)`` token positions in one forward; sharing one scale across
+    the U tokens would change numerics vs running them sequentially.
+    Under this context the amax reduction keeps every leading axis and
+    reduces only the feature axis, so each token row of the flattened
+    ``(B*U, K)`` grouped GEMM carries the same scale sequential decode
+    would give it — the chunked forward stays bit-identical to U
+    single-token steps.
+    """
+    global _token_scales
+    prev = _token_scales
+    _token_scales = True
+    try:
+        yield
+    finally:
+        _token_scales = prev
+
+
 def set_row_dispatch(mode: str) -> None:
     """'grouped' (default) or 'vmap' (the per-row baseline, kept for
     benchmarks/parity tests).  Read at trace time."""
@@ -397,8 +424,12 @@ def _serve_linear_rows(p, x, wbits, abits, interpret):
     lead = x.shape[:-1]
     x2 = x.astype(jnp.float32)
     # per-row dynamic activation quantization at per-row abits (elementwise
-    # — activations never need grouping)
-    axes = tuple(range(1, x2.ndim))
+    # — activations never need grouping); token_scale_mode keeps one scale
+    # per token position instead of one per request (verify chunks)
+    if _token_scales:
+        axes = (x2.ndim - 1,)
+    else:
+        axes = tuple(range(1, x2.ndim))
     amax = jnp.max(jnp.abs(x2), axis=axes, keepdims=True)   # (B, 1, ..., 1)
     ab_b = ab.reshape((B,) + (1,) * (x2.ndim - 1))
     lim = bf.qmax(ab_b)

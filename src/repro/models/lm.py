@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import dist
+from repro.kernels import ops as kops
 from repro.models import common as cm
 from repro.models import encdec, hybrid, mamba2, moe, transformer as tf
 from repro.models.config import ModelConfig
@@ -452,6 +453,43 @@ def decode_step(params, tok: jnp.ndarray, t, cache: dict, cfg: ModelConfig,
                       _last_layer_bits(avec)), new_cache)
 
 
+# Families whose decode supports chunked (multi-position) steps — the
+# speculative-verify forward.  Attention masks future positions exactly;
+# SSM/hybrid recurrences have no per-position rollback.
+SPEC_CHUNK_FAMILIES = ("dense", "vlm")
+
+
+def decode_chunk(params, toks: jnp.ndarray, t, cache: dict, cfg: ModelConfig,
+                 wvec, avec) -> Tuple[jnp.ndarray, dict]:
+    """Decode U consecutive positions per row in ONE forward.
+
+    ``toks`` (B, U) int32 with ``toks[:, i]`` at position ``t + i``
+    (``t`` scalar or (B,)).  This is the speculative-verify step: the
+    chunked attention branch writes the same ring slots sequential decode
+    would, each query sees exactly its ``kpos <= pos`` prefix, and
+    activations quantize under per-token scales (``kops.token_scale_mode``)
+    — so on the per-row bit-matrix path the returned logits are
+    bit-identical to U sequential :func:`decode_step` calls (the verify
+    invariant; DESIGN.md §11).  Returns (logits (B, U, V), new_cache).
+    """
+    if cfg.family not in SPEC_CHUNK_FAMILIES:
+        raise NotImplementedError(
+            f"chunked decode is implemented for the attention families "
+            f"{SPEC_CHUNK_FAMILIES}, not {cfg.family!r}")
+    B, U = toks.shape
+    x = embed(params, toks)
+    t = jnp.asarray(t, jnp.int32)
+    positions = (jnp.broadcast_to(t, (B,))[:, None]
+                 + jnp.arange(U, dtype=jnp.int32)[None])   # (B, U)
+    with kops.token_scale_mode():
+        h, new_cache, _ = forward_hidden(params, x, cfg, wvec, avec,
+                                         positions=positions, cache=cache,
+                                         t=t)
+        logits = logits_fn(params, h, cfg, _last_layer_bits(wvec),
+                           _last_layer_bits(avec))
+    return logits, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Slot-based persistent cache pool (continuous batching)
 # ---------------------------------------------------------------------------
@@ -523,10 +561,26 @@ class CachePool:
                 lambda path, p: leaf(p, tuple(
                     str(getattr(k, "key", k)) for k in path)), pool)
 
+        def rollback_rows(pool, keeps):
+            # speculative-decode rejection: entries past keeps[slot] go
+            # invisible (kpos -> EMPTY_POS); K/V payloads stay in place,
+            # masked by kpos exactly like reset_slot.  kpos leaves are
+            # (L, n_slots, Sc); rows outside the spec round pass
+            # keep >= EMPTY_POS and are untouched.
+            def leaf(path, p):
+                if path and path[-1] == "kpos":
+                    return jnp.where(p > keeps[None, :, None],
+                                     tf.EMPTY_POS, p)
+                return p
+            return jax.tree_util.tree_map_with_path(
+                lambda path, p: leaf(tuple(
+                    str(getattr(k, "key", k)) for k in path), p), pool)
+
         self._write = jax.jit(write_row, donate_argnums=(0,))
         self._install = jax.jit(install_row, donate_argnums=(0,))
         self._copy = jax.jit(copy_row, donate_argnums=(0,))
         self._reset = jax.jit(reset_row, donate_argnums=(0,))
+        self._rollback = jax.jit(rollback_rows, donate_argnums=(0,))
 
     @property
     def free_slots(self) -> int:
@@ -581,6 +635,16 @@ class CachePool:
         self.cache = self._install(self.cache, row_cache,
                                    jnp.asarray(slot, jnp.int32),
                                    jnp.asarray(keep, jnp.int32))
+
+    def rollback(self, keeps) -> None:
+        """Mask every cache entry past ``keeps[slot]`` per slot (the
+        speculative-decode rejection path): ``kpos > keep`` becomes
+        EMPTY_POS across all layers.  ``keeps`` is an ``(n_slots,)``
+        int32 vector of last-kept absolute positions; slots not in a
+        speculative round pass any value >= EMPTY_POS (no-op).  Runs as
+        one jitted donate-in-place masking — no retrace across rounds."""
+        self.cache = self._rollback(self.cache,
+                                    jnp.asarray(keeps, jnp.int32))
 
     def copy_row(self, src: int, dst: int,
                  length: Optional[int] = None) -> None:

@@ -268,6 +268,41 @@ def attention(p, x, cfg, wbits=8, abits=8, *, positions, causal: bool = True,
             v = _row_insert(cache["v"], v_new, slot)
             new_cache = {"k": k, "v": v, "kpos": kpos}
             out = _sdpa(q, k, v, bias, cfg)
+    elif cache is not None and t is not None:            # chunked decode
+        # Speculative verify: U consecutive token positions per row in ONE
+        # forward.  Writes land in the same ring slots sequential decode
+        # would use; each query position sees exactly the kpos <= pos
+        # prefix, so the chunk is bit-identical to U single-token steps
+        # (the draft's stale entries past each query are masked, and
+        # rejected slots are rolled back to EMPTY_POS by the caller).
+        use_head = k_new.shape[2] % dist.api.tp_size() == 0
+        q = dist.constrain_heads(q, 2, 3, use_head)
+        k_new = dist.constrain_heads(k_new, 2, 3, use_head)
+        v_new = dist.constrain_heads(v_new, 2, 3, use_head)
+        B, U = x.shape[:2]
+        Sc = cache["k"].shape[1]
+        pos = positions.astype(jnp.int32)                # (B, U)
+        slots = (pos % Sc).astype(jnp.int32)             # (B, U)
+        scatter = jax.vmap(lambda b, n, s: b.at[s].set(n))
+        kpos = scatter(cache["kpos"], pos, slots)
+        visible = kpos[:, None, :] <= pos[:, :, None]    # (B, U, Sc)
+        if cfg.sliding_window:
+            visible &= kpos[:, None, :] > pos[:, :, None] - cfg.sliding_window
+        bias = jnp.where(visible, 0.0, -jnp.inf).astype(jnp.float32)
+        if "ks" in cache:                                # int8 cache path
+            kq_n, ks_n = _quant_heads(k_new)
+            vq_n, vs_n = _quant_heads(v_new)
+            k = scatter(cache["k"], kq_n, slots)
+            v = scatter(cache["v"], vq_n, slots)
+            ks = scatter(cache["ks"], ks_n, slots)
+            vs = scatter(cache["vs"], vs_n, slots)
+            new_cache = {"k": k, "v": v, "ks": ks, "vs": vs, "kpos": kpos}
+            out = _sdpa_int8(q, k, ks, v, vs, bias, cfg)
+        else:
+            k = scatter(cache["k"], k_new, slots)
+            v = scatter(cache["v"], v_new, slots)
+            new_cache = {"k": k, "v": v, "kpos": kpos}
+            out = _sdpa(q, k, v, bias, cfg)
     else:                                                # full sequence
         pos1 = positions[0]
         k, v = k_new, v_new

@@ -102,6 +102,23 @@ class CostRecord:
     submitted_tick: int = -1
     admitted_tick: int = -1
     finished_tick: int = -1
+    # speculative decoding (DESIGN.md §11): draft tokens run at the
+    # request's DRAFT bits (``draft_cost`` prices one), verify rounds run
+    # one (spec_k+1)-token chunk at its target bits (``verify_cost``
+    # prices one round).  Tokens delivered by spec rounds (spec_tokens)
+    # are NOT charged at ap_cost — their compute is the drafts plus the
+    # chunks, priced honestly below in ap_latency_s / ap_energy_j.
+    spec_k: int = 0                     # draft depth chosen at admission
+    draft_cost: Optional[apm.BitVectorCost] = None   # one draft token
+    verify_cost: Optional[apm.BitVectorCost] = None  # one verify round
+    draft_units: int = 0                # draft tokens generated
+    verify_units: int = 0               # token positions verified
+    accepted_units: int = 0             # draft tokens accepted by verify
+    spec_rounds: int = 0                # draft+verify rounds run
+    spec_tokens: int = 0                # tokens delivered by spec rounds
+    planned_spec_rounds: int = 0        # rounds charged at admission
+    planned_spec_tokens: int = 0        # tokens those rounds were planned
+                                        # to deliver (full acceptance)
 
     @property
     def ap_units(self) -> int:
@@ -123,19 +140,65 @@ class CostRecord:
             return -1
         return self.finished_tick - self.submitted_tick
 
+    def _axis_total(self, axis: str, base_units: float, draft_units: int,
+                    rounds: int) -> float:
+        """Budget-axis cost of ``base_units`` at ap_cost plus a
+        speculative component (``draft_units`` draft tokens +
+        ``rounds`` verify chunks).  With zero spec terms this is exactly
+        :func:`axis_cost` — same float summation order, so non-spec
+        charging is bit-identical to the historical path."""
+        lat = base_units * self.ap_cost.latency_s
+        en = base_units * self.ap_cost.energy_j
+        if self.draft_cost is not None and draft_units:
+            lat += draft_units * self.draft_cost.latency_s
+            en += draft_units * self.draft_cost.energy_j
+        if self.verify_cost is not None and rounds:
+            lat += rounds * self.verify_cost.latency_s
+            en += rounds * self.verify_cost.energy_j
+        if axis == "latency":
+            return lat
+        if axis == "energy":
+            return en
+        if axis == "edp":
+            return en * lat
+        raise ValueError(f"unknown budget axis {axis!r}")
+
+    def axis_planned(self, axis: str) -> float:
+        """Budget-axis cost charged at admission: planned units at
+        ap_cost, with the decode tokens a spec plan covers re-priced as
+        planned draft+verify rounds (full acceptance)."""
+        if self.ap_cost is None:
+            return 0.0
+        return self._axis_total(axis,
+                                self.planned_units - self.planned_spec_tokens,
+                                self.planned_spec_rounds * self.spec_k,
+                                self.planned_spec_rounds)
+
+    def axis_actual(self, axis: str) -> float:
+        """Budget-axis cost of what this request actually ran: non-spec
+        units at ap_cost plus the real draft/verify round counts —
+        the reconciliation side of the ledger."""
+        if self.ap_cost is None:
+            return 0.0
+        return self._axis_total(axis, self.ap_units - self.spec_tokens,
+                                self.draft_units, self.spec_rounds)
+
     @property
     def ap_latency_s(self) -> float:
         """Modeled AP latency of every processed unit at this request's
-        precision configuration."""
+        precision configuration (spec-round units priced as their drafts
+        + verify chunks)."""
         if self.ap_cost is None:
             return 0.0
-        return self.ap_units * self.ap_cost.latency_s
+        return self._axis_total("latency", self.ap_units - self.spec_tokens,
+                                self.draft_units, self.spec_rounds)
 
     @property
     def ap_energy_j(self) -> float:
         if self.ap_cost is None:
             return 0.0
-        return self.ap_units * self.ap_cost.energy_j
+        return self._axis_total("energy", self.ap_units - self.spec_tokens,
+                                self.draft_units, self.spec_rounds)
 
     @property
     def edp(self) -> float:
@@ -240,18 +303,35 @@ def aggregate(records: Iterable[CostRecord]) -> Dict[str, float]:
     """
     recs = list(records)
     hits = sum(1 for r in recs if r.cached_units > 0)
+    draft = sum(r.draft_units for r in recs)
+    accepted = sum(r.accepted_units for r in recs)
+    spec_tokens = sum(r.spec_tokens for r in recs)
+    edp_total = sum(r.edp for r in recs)
+    units = sum(r.ap_units for r in recs)
     return {
         "requests": len(recs),
         "completed": sum(1 for r in recs if r.done),
-        "ap_units": sum(r.ap_units for r in recs),
+        "ap_units": units,
         "ap_latency_s": sum(r.ap_latency_s for r in recs),
         "ap_energy_j": sum(r.ap_energy_j for r in recs),
-        "edp": sum(r.edp for r in recs),
+        "edp": edp_total,
         # prefix-cache tier split (0 / 0.0 when no tier is configured)
         "prefix_hits": hits,
         "prefix_hit_rate": round(hits / len(recs), 4) if recs else 0.0,
         "cached_units": sum(r.cached_units for r in recs),
         "prefill_edp_saved_js": sum(r.prefill_edp_saved_js for r in recs),
+        # speculative-decoding split (all 0 when no request drafted):
+        # accept_rate is accepted drafts over drafts, the net-EDP view is
+        # total modeled EDP over units actually delivered — drafting
+        # only wins this ledger when the extra draft energy is outrun by
+        # the latency the accepted tokens skip (DESIGN.md §11)
+        "spec_draft_units": draft,
+        "spec_accepted_units": accepted,
+        "spec_verify_units": sum(r.verify_units for r in recs),
+        "spec_rounds": sum(r.spec_rounds for r in recs),
+        "spec_tokens": spec_tokens,
+        "spec_accept_rate": round(accepted / draft, 4) if draft else 0.0,
+        "edp_per_unit_js": edp_total / units if units else 0.0,
     }
 
 
@@ -311,6 +391,23 @@ class BitVectorPricer:
         if hit is None:
             hit = apm.price_bit_vector(self.gemms, wv.tolist(), av.tolist(),
                                        head=self.head)
+            self._cache[key] = hit
+        return hit
+
+    def price_verify(self, wv, av, u: int) -> apm.BitVectorCost:
+        """AP cost of ONE u-token verify chunk at this bit vector: every
+        serve GEMV batches over u token rows (the ``(B·(k+1), K)``
+        grouped GEMM), priced through the chunked serve mapping
+        (``apsim.metrics.serve_gemv_cost``).  Cached per (vector, u)."""
+        if u < 1:
+            raise ValueError(f"verify chunk width must be >= 1, got {u}")
+        wv = np.asarray(wv, np.int64)
+        av = np.asarray(av, np.int64)
+        key = self._key(wv, av) + b"|u" + str(int(u)).encode()
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = apm.price_bit_vector(self.gemms, wv.tolist(), av.tolist(),
+                                       head=self.head, units=int(u))
             self._cache[key] = hit
         return hit
 

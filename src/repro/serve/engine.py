@@ -53,6 +53,11 @@ from repro.serve.runtime import (ServeRuntime, SlotTable,
                                  UNCONSTRAINED_BUDGET)
 
 TOPK_MAX = 64          # static top-k sort width; per-row k <= TOPK_MAX
+SPEC_K_MAX = 8         # static draft depth ceiling: every speculative
+                       # round drafts SPEC_K_MAX tokens and verifies one
+                       # (SPEC_K_MAX + 1)-wide chunk, so ONE compiled
+                       # draft program and ONE verify program cover every
+                       # (slot, k, accept-length) combination
 
 
 @dataclasses.dataclass
@@ -67,24 +72,36 @@ class Request:
     prefix: Optional[np.ndarray] = None  # vlm: (n_prefix_tokens, d) stub
     rep_key: Optional[int] = None       # traffic repetition key (the
                                         # prefix-cache count signal)
+    draft_k: Optional[int] = None       # speculative draft depth override
+                                        # (None: engine/controller decides)
 
 
-def _sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
+def _scaled_logits(logits: jnp.ndarray, temperature: jnp.ndarray,
                    top_k: jnp.ndarray) -> jnp.ndarray:
-    """Per-row sampling: logits (B, V); temperature/top_k (B,).
-
-    temperature == 0 -> greedy; top_k > 0 masks all but the row's k best
-    logits (static TOPK_MAX sort width, per-row threshold gather)."""
+    """Per-row masked + temperature-scaled logits: logits (B, V);
+    temperature/top_k (B,).  top_k > 0 masks all but the row's k best
+    logits (static TOPK_MAX sort width, per-row threshold gather).  The
+    single definition of the sampling distribution — sampling draws from
+    softmax of this, and speculative rejection-accept tests drafts
+    against the same densities."""
     V = logits.shape[-1]
     logits = logits.astype(jnp.float32)
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     K = min(TOPK_MAX, V)
     vals, _ = jax.lax.top_k(logits, K)                       # (B, K)
     kth = jnp.take_along_axis(vals, jnp.clip(top_k, 1, K)[:, None] - 1,
                               axis=1)                        # (B, 1)
     masked = jnp.where((top_k[:, None] > 0) & (logits < kth),
                        -jnp.inf, logits)
-    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    return masked / jnp.maximum(temperature, 1e-6)[:, None]
+
+
+def _sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
+                   top_k: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sampling: logits (B, V); temperature/top_k (B,).
+    temperature == 0 -> greedy."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = _scaled_logits(logits, temperature, top_k)
     sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temperature > 0, sampled, greedy)
 
@@ -106,8 +123,33 @@ class ServeEngine(ServeRuntime):
                  policy: Optional[PrecisionPolicy] = None,
                  mesh=None, n_slots: int = 4, prefill_len: int = 32,
                  decode_block: int = 8, eos_id: Optional[int] = None,
-                 seed: int = 0, prefix_cache: Optional[PrefixCache] = None):
+                 seed: int = 0, prefix_cache: Optional[PrefixCache] = None,
+                 spec_k: Optional[int] = None,
+                 draft_budget_s: Optional[float] = None):
         self.cfg = cfg
+        # ---- speculative decoding (DESIGN.md §11): spec_k=None disables
+        # entirely; an int enables self-drafting with that default depth
+        # (a FluidController overrides per admission via draft_depth()).
+        # draft_budget_s picks the DRAFT bit configuration through the
+        # same controller tables (None -> 0.0 -> the cheapest config).
+        if spec_k is not None:
+            if not 0 <= spec_k <= SPEC_K_MAX:
+                raise ValueError(
+                    f"spec_k={spec_k} not in [0, {SPEC_K_MAX}]")
+            if cfg.sliding_window:
+                raise ValueError(
+                    "speculative decoding needs a non-wrapping KV ring; "
+                    "sliding_window models must serve with spec_k=None")
+            if cfg.family not in lm.SPEC_CHUNK_FAMILIES:
+                raise ValueError(
+                    f"speculative decoding needs the chunked verify path; "
+                    f"family {cfg.family!r} is unsupported "
+                    f"(supported: {lm.SPEC_CHUNK_FAMILIES})")
+        self.spec_k = spec_k
+        self._draft_budget_f = (0.0 if draft_budget_s is None
+                                else float(draft_budget_s))
+        self._draft_bits_c = None
+        self._draft_price = None
         mesh = mesh if mesh is not None else dist.active_mesh()
         if mesh is not None:            # place serve weights once, sharded
             qparams = jax.device_put(
@@ -158,7 +200,8 @@ class ServeEngine(ServeRuntime):
             tok=(np.int64, 0), t=(np.int64, 0),
             budget=(np.float64, 0.0),           # freed rows: cheapest bits
             temp=(np.float64, 0.0), topk=(np.int64, 0),
-            remaining=(np.int64, 0))
+            remaining=(np.int64, 0),
+            k=(np.int64, 0))                    # speculative draft depth
         self._just_finished: List[int] = []
 
         # ---- compiled programs (each traces exactly once per shape)
@@ -192,6 +235,93 @@ class ServeEngine(ServeRuntime):
             logits, cache = lm.decode_step(q, tok, t, cache, cfg, wv, av)
             nxt = _sample_tokens(logits[:, -1], key, temp, topk)
             return nxt[:, None], t + 1, cache, nxt
+
+        def _draft_scan(q, tok, t, cache, wv, av, temp, topk, keys):
+            # speculative self-draft: SPEC_K_MAX scan-fused decode steps
+            # at the engine's LOW draft bits (one program for every k —
+            # rows with shallower depth simply ignore the tail).  Also
+            # returns each draft's sampling density q_i: the rejection
+            # verify tests p_i/q_i against the same distributions the
+            # tokens were drawn from.
+            self.stats.trace("draft")
+
+            def step(carry, key):
+                tok, t, cache = carry
+                logits, cache = lm.decode_step(q, tok, t, cache, cfg, wv, av)
+                flat = logits[:, -1].astype(jnp.float32)
+                nxt = _sample_tokens(flat, key, temp, topk)
+                probs = jax.nn.softmax(
+                    _scaled_logits(flat, temp, topk), axis=-1)
+                return (nxt[:, None], t + 1, cache), (nxt, probs)
+
+            (_, _, cache), (toks, probs) = jax.lax.scan(
+                step, (tok, t, cache), keys)
+            return (jnp.moveaxis(toks, 0, 1),        # (B, SPEC_K_MAX)
+                    jnp.moveaxis(probs, 0, 1),       # (B, SPEC_K_MAX, V)
+                    cache)
+
+        def _spec_verify(q, tok, draft_toks, draft_probs, t, cache,
+                         wv, av, k_eff, temp, topk, key_u, key_s):
+            # batched high-bit verify: ONE (SPEC_K_MAX + 1)-wide chunk
+            # scores the current token + every draft at each row's own
+            # TARGET bits, overwriting the draft-precision cache entries
+            # in place.  Greedy rows accept the longest exact-argmax
+            # prefix; sampled rows run rejection resampling against the
+            # draft densities (accept u < p/q, resample the first
+            # rejection from normalize(max(p - q, 0)), bonus draw from p
+            # on full accept) — both paths emit a + 1 tokens.  k_eff is
+            # the per-row accept clamp (min(spec_k, remaining - 1)), so
+            # one compiled program covers every (slot, k, accept-length)
+            # combination.
+            self.stats.trace("verify")
+            B = tok.shape[0]
+            U = SPEC_K_MAX + 1
+            toks = jnp.concatenate([tok, draft_toks], axis=1)     # (B, U)
+            logits, cache = lm.decode_chunk(q, toks, t, cache, cfg, wv, av)
+            logits = logits.astype(jnp.float32)
+            ver = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, U)
+            flat = logits.reshape(B * U, -1)
+            p = jax.nn.softmax(
+                _scaled_logits(flat, jnp.repeat(temp, U),
+                               jnp.repeat(topk, U)), axis=-1
+            ).reshape(B, U, -1)                   # per-position target dists
+            p_g = jnp.take_along_axis(p[:, :SPEC_K_MAX],
+                                      draft_toks[..., None],
+                                      axis=-1)[..., 0]            # (B, K)
+            q_g = jnp.take_along_axis(draft_probs, draft_toks[..., None],
+                                      axis=-1)[..., 0]
+            u = jax.random.uniform(key_u, draft_toks.shape)
+            ok = jnp.where(temp[:, None] > 0,
+                           u * jnp.maximum(q_g, 1e-20) < p_g,     # u < p/q
+                           draft_toks == ver[:, :SPEC_K_MAX])
+            ok &= jnp.arange(SPEC_K_MAX)[None] < k_eff[:, None]
+            a = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                        axis=1)                  # accepted prefix length
+            # the (a+1)-th emitted token: greedy rows take the verify
+            # argmax at position a; sampled rows draw from the residual
+            # (or from p itself at a == k_eff, the full-accept bonus)
+            p_a = jnp.take_along_axis(p, a[:, None, None], axis=1)[:, 0]
+            q_pad = jnp.concatenate(
+                [draft_probs, jnp.zeros_like(draft_probs[:, :1])], axis=1)
+            q_a = jnp.take_along_axis(q_pad, a[:, None, None], axis=1)[:, 0]
+            resid = jnp.where((a < k_eff)[:, None],
+                              jnp.maximum(p_a - q_a, 0.0), p_a)
+            tot = jnp.sum(resid, axis=-1, keepdims=True)
+            rdist = jnp.where(tot > 0, resid / jnp.maximum(tot, 1e-30), p_a)
+            extra = jnp.where(
+                temp > 0,
+                jax.random.categorical(
+                    key_s, jnp.log(rdist + 1e-30),
+                    axis=-1).astype(jnp.int32),
+                jnp.take_along_axis(ver, a[:, None], axis=1)[:, 0])
+            emitted = jnp.where(
+                jnp.arange(U)[None] < a[:, None],
+                jnp.concatenate([draft_toks, draft_toks[:, -1:]], axis=1),
+                extra[:, None])                                   # (B, U)
+            # extra is the round's LAST delivered token = next round's
+            # input; keep = t + a is the rollback watermark (entries past
+            # it were computed from rejected drafts)
+            return extra, t + a + 1, emitted, a + 1, t + a, cache
 
         def _sample_first(logits, key, temp, topk):
             return _sample_tokens(logits[:, -1], key, temp, topk)
@@ -234,6 +364,8 @@ class ServeEngine(ServeRuntime):
         self._prefill_row = jax.jit(_prefill_row)
         self._decode_scan = jax.jit(_decode_scan, donate_argnums=(3,))
         self._decode_one = jax.jit(_decode_one, donate_argnums=(3,))
+        self._draft = jax.jit(_draft_scan, donate_argnums=(3,))
+        self._verify = jax.jit(_spec_verify, donate_argnums=(5,))
         self._sample_first = jax.jit(_sample_first)
         self._extend_row = jax.jit(_extend_row)
 
@@ -259,6 +391,40 @@ class ServeEngine(ServeRuntime):
         """Per-token AP cost of the configuration a scalar budget selects."""
         return self.price_bits(
             *self.controller.resolve(jnp.asarray(budget_s, jnp.float32)))
+
+    def _draft_bits(self):
+        """Device-side draft bit matrix (n_slots, L): the draft budget's
+        configuration broadcast across rows.  Resolved once — pure data
+        for the compiled draft program."""
+        if self._draft_bits_c is None:
+            wv, av = self.controller.resolve(
+                jnp.asarray(self._draft_budget_f, jnp.float32))
+            wv = jnp.broadcast_to(wv, (self.n_slots,) + wv.shape)
+            av = jnp.broadcast_to(av, (self.n_slots,) + av.shape)
+            if self.mesh is not None:
+                wv = shd.shard_bits(wv, self.mesh)
+                av = shd.shard_bits(av, self.mesh)
+            self._draft_bits_c = (wv, av)
+        return self._draft_bits_c
+
+    def _draft_pricing(self):
+        """Per-token AP cost of one draft step at the draft bits (cached)."""
+        if self._draft_price is None:
+            dwv, dav = self.host_bits(self._draft_budget_f)
+            self._draft_price = self.pricer.price(dwv, dav)
+        return self._draft_price
+
+    def _resolve_draft_k(self, req: Request) -> int:
+        """Draft depth for one admission: the request's explicit
+        ``draft_k``, else the FluidController's headroom-scaled depth,
+        else the engine default (spec_k=None disables)."""
+        if req.draft_k is not None:
+            return int(req.draft_k)
+        if self.spec_k is None:
+            return 0
+        if isinstance(self.controller, FluidController):
+            return min(self.controller.draft_depth(), SPEC_K_MAX)
+        return self.spec_k
 
     def _split_key(self, num: int):
         keys = jax.random.split(self._key, num + 1)
@@ -329,14 +495,17 @@ class ServeEngine(ServeRuntime):
     def submit(self, prompt, *, max_new_tokens: int = 16,
                budget_s: Optional[float] = None, temperature: float = 0.0,
                top_k: int = 0, prefix=None,
-               rep_key: Optional[int] = None) -> int:
+               rep_key: Optional[int] = None,
+               draft_k: Optional[int] = None) -> int:
         """Enqueue a request; returns its id.  ``budget_s`` caps this
         request's precision configuration (None = loosest/most accurate;
         under a FluidController the closed loop may tighten it further).
         vlm models require ``prefix`` (n_prefix_tokens, d_model).
         ``rep_key`` threads a traffic repetition key to the prefix-cache
         tier (hits are content-keyed either way; the key feeds the
-        repetition-aware eviction value)."""
+        repetition-aware eviction value).  ``draft_k`` overrides the
+        speculative draft depth for this request (0 = vanilla decode;
+        None = the engine/controller decides)."""
         if self.cfg.family not in lm.RAGGED_PREFILL_FAMILIES:
             raise NotImplementedError(
                 f"the continuous-batching API needs ragged prefill; family "
@@ -356,6 +525,34 @@ class ServeEngine(ServeRuntime):
                              "exceeds max_len (KV ring would wrap)")
         if top_k > TOPK_MAX:
             raise ValueError(f"top_k={top_k} exceeds TOPK_MAX={TOPK_MAX}")
+        if draft_k is not None and not 0 <= draft_k <= SPEC_K_MAX:
+            raise ValueError(f"draft_k={draft_k} not in [0, {SPEC_K_MAX}]")
+        # speculative rounds write up to SPEC_K_MAX positions past the
+        # accepted point before rollback — the KV ring must never wrap
+        # under them (wrapped slots would expose stale-lap entries to
+        # the chunked verify).  Enforced whenever this request COULD
+        # draft: an explicit draft_k > 0, or a spec-enabled engine whose
+        # controller may pick k > 0 at admission time.
+        spec_possible = (draft_k or 0) > 0 or (
+            draft_k is None and self.spec_k is not None
+            and (self.spec_k > 0
+                 or isinstance(self.controller, FluidController)))
+        if spec_possible:
+            if self.cfg.sliding_window:
+                raise ValueError(
+                    "speculative decoding needs a non-wrapping KV ring; "
+                    "sliding_window requests must submit draft_k=0")
+            if self.cfg.family not in lm.SPEC_CHUNK_FAMILIES:
+                raise ValueError(
+                    f"speculative decoding unsupported for family "
+                    f"{self.cfg.family!r} "
+                    f"(supported: {lm.SPEC_CHUNK_FAMILIES})")
+            if (prefix_len + self.prefill_len + max_new_tokens
+                    + SPEC_K_MAX > self.max_len):
+                raise ValueError(
+                    "prefix + prefill_len + max_new_tokens + SPEC_K_MAX "
+                    "exceeds max_len (a speculative round could wrap the "
+                    "KV ring); submit draft_k=0 or shrink the request")
         if self.cfg.family == "vlm":
             if prefix is None:
                 raise ValueError("vlm requests need a prefix "
@@ -369,7 +566,7 @@ class ServeEngine(ServeRuntime):
         req = Request(rid, prompt, max_new_tokens,
                       None if budget_s is None else float(budget_s),
                       float(temperature), int(top_k), prefix=prefix,
-                      rep_key=rep_key)
+                      rep_key=rep_key, draft_k=draft_k)
         record = RequestStats(
             rid=rid,
             budget_s=(float(budget_s) if budget_s is not None
@@ -416,18 +613,33 @@ class ServeEngine(ServeRuntime):
             S = req.prompt.shape[0]
             record = self.requests[req.rid]
             planned = S + req.max_new_tokens
-            hit = eff = wv_np = av_np = None
+            hit = wv_np = av_np = None
+            # resolve the effective budget HOST-side first: the prefix
+            # cache's precision gate and the speculative plan's pricing
+            # both need the bits before any charging
+            eff = self.admission_budget(req.budget_s)
             if self._cacheable(req):
-                # resolve the effective budget's bits HOST-side first:
-                # the precision gate needs them before any charging
-                eff = self.admission_budget(req.budget_s)
                 wv_np, av_np = self.host_bits(eff)
                 hit = self.prefix_cache.lookup(
                     req.prompt, wv_np, av_np, rep_key=req.rep_key)
             cached = hit.keep if hit is not None else 0
+            # speculative plan: charge draft + verify pricing for the
+            # planned rounds at admission (full-accept plan; the honest
+            # per-round actuals reconcile at finish)
+            k_req = self._resolve_draft_k(req)
+            spec = None
+            if k_req > 0 and req.max_new_tokens > 1:
+                swv, sav = self.host_bits(eff)
+                spec = (k_req, self._draft_pricing(),
+                        self.pricer.price_verify(swv, sav, k_req + 1),
+                        -(-(req.max_new_tokens - 1) // (k_req + 1)),
+                        req.max_new_tokens - 1)
+            else:
+                k_req = 0
             wv, av = self.admit_record(record, req.budget_s, planned,
                                        eff=eff,
-                                       charge_units=planned - cached)
+                                       charge_units=planned - cached,
+                                       spec=spec)
             if hit is not None:
                 record.cached_units = cached
                 record.cache_hit = "full" if hit.full else "partial"
@@ -485,7 +697,7 @@ class ServeEngine(ServeRuntime):
             self.slots.occupy(slot, req.rid, tok=int(first[0]),
                               t=S + prefix_len, budget=record.budget_s,
                               temp=req.temperature, topk=req.top_k,
-                              remaining=req.max_new_tokens - 1)
+                              remaining=req.max_new_tokens - 1, k=k_req)
             admitted.append(req.rid)
             if self.slots["remaining"][slot] <= 0 or (
                     self.eos_id is not None
@@ -519,24 +731,43 @@ class ServeEngine(ServeRuntime):
     def _step(self) -> List[int]:
         self.age_queue()
         self._admit()
-        pool = self.pool
         slots = self.slots
         active = slots.active
-        if not active.any():
-            done = self._just_finished
-            self._just_finished = []
-            return done
+        if active.any():
+            # a round can accept at most remaining - 1 drafts (the +1
+            # verified token must not overshoot max_new_tokens), so a
+            # batch whose every row is clamped to 0 takes the vanilla
+            # scan-fused block — speculation degrades to today's path
+            k_eff = np.where(
+                active, np.minimum(slots["k"], slots["remaining"] - 1),
+                0).astype(np.int64)
+            if k_eff.max() > 0:
+                self._spec_round(active, k_eff)
+            else:
+                self._decode_tick(active)
+        done = self._just_finished
+        self._just_finished = []
+        return done
+
+    def _batch_bits(self):
         # submit() guarantees a RAGGED_PREFILL_FAMILIES family, all of
         # which support per-row bits — so budgets are always per-slot
         # (effective budgets were frozen at admission: a request's
         # configuration is stable for its lifetime even under the
         # closed-loop controller)
         budgets = shd.shard_budgets(
-            jnp.asarray(slots["budget"], jnp.float32), self.mesh)   # (B,)
+            jnp.asarray(self.slots["budget"], jnp.float32), self.mesh)  # (B,)
         wv, av = self.controller.resolve(budgets)
         if self.mesh is not None:
             wv, av = shd.shard_bits(wv, self.mesh), shd.shard_bits(av,
                                                                    self.mesh)
+        return wv, av
+
+    def _decode_tick(self, active) -> None:
+        """Vanilla tick: one scan-fused decode block, per-row bits."""
+        pool = self.pool
+        slots = self.slots
+        wv, av = self._batch_bits()
         keys = self._split_key(self.decode_block)
         tok = jnp.asarray(slots["tok"][:, None], jnp.int32)
         t = jnp.asarray(slots["t"], jnp.int32)
@@ -561,9 +792,63 @@ class ServeEngine(ServeRuntime):
                        and new[-1] == self.eos_id)
             if slots["remaining"][slot] <= 0 or hit_eos:
                 self._finish(slot)
-        done = self._just_finished
-        self._just_finished = []
-        return done
+
+    def _spec_round(self, active, k_eff_h) -> None:
+        """One speculative round for the whole batch: draft SPEC_K_MAX
+        tokens per row at the LOW draft bits, verify the current token +
+        all drafts in ONE (SPEC_K_MAX + 1)-wide chunked pass at each
+        row's own target bits, deliver the longest accepted prefix + 1
+        tokens, and mask the rejected KV entries
+        (:meth:`repro.models.lm.CachePool.rollback`).  Rows with
+        k_eff == 0 ride along and deliver exactly their one verified
+        (target-bits) token — greedy output is bit-identical to the
+        vanilla path either way."""
+        pool = self.pool
+        slots = self.slots
+        wv, av = self._batch_bits()
+        dwv, dav = self._draft_bits()
+        keys = self._split_key(SPEC_K_MAX + 2)
+        tok = jnp.asarray(slots["tok"][:, None], jnp.int32)
+        t = jnp.asarray(slots["t"], jnp.int32)
+        temp = jnp.asarray(slots["temp"], jnp.float32)
+        topk = jnp.asarray(slots["topk"], jnp.int32)
+        k_eff = jnp.asarray(k_eff_h, jnp.int32)
+        draft_toks, draft_probs, pool.cache = self._draft(
+            self.qparams, tok, t, pool.cache, dwv, dav, temp, topk,
+            keys[:SPEC_K_MAX])
+        nxt, t_next, emitted, count, keep, pool.cache = self._verify(
+            self.qparams, tok, draft_toks, draft_probs, t, pool.cache,
+            wv, av, k_eff, temp, topk, keys[SPEC_K_MAX],
+            keys[SPEC_K_MAX + 1])
+        pool.rollback(keep)
+        emitted_h = np.asarray(emitted)
+        count_h = np.asarray(count)
+        slots["tok"][:] = np.asarray(nxt).astype(np.int64)
+        slots["t"][:] = np.asarray(t_next).astype(np.int64)
+        for slot in np.nonzero(active)[0]:
+            rid = int(slots.rid[slot])
+            st = self.requests[rid]
+            take = int(count_h[slot])           # a + 1 <= remaining
+            new = emitted_h[slot, :take].tolist()
+            if self.eos_id is not None and self.eos_id in new:
+                new = new[:new.index(self.eos_id) + 1]
+            st.tokens.extend(int(x) for x in new)
+            self.stats.tokens += len(new)
+            slots["remaining"][slot] -= take
+            k_req = int(slots["k"][slot])
+            if k_req > 0:
+                # honest per-round actuals at the REQUEST's chosen depth
+                # (clamped tail rounds still run/charge the full-width
+                # chunk; acceptance just can't use the tail)
+                st.spec_rounds += 1
+                st.draft_units += k_req
+                st.verify_units += k_req + 1
+                st.accepted_units += take - 1
+                st.spec_tokens += len(new)
+            hit_eos = (self.eos_id is not None and new
+                       and new[-1] == self.eos_id)
+            if slots["remaining"][slot] <= 0 or hit_eos:
+                self._finish(slot)
 
 
 def _default_policy() -> PrecisionPolicy:

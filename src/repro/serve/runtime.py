@@ -190,7 +190,8 @@ class ServeRuntime:
     def admit_record(self, record: CostRecord,
                      requested: Optional[float], units: int, *,
                      eff: Optional[float] = None,
-                     charge_units: Optional[int] = None
+                     charge_units: Optional[int] = None,
+                     spec: Optional[Tuple] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Resolve one admission end to end: effective budget → bit
         vectors (pure-data gather) → AP pricing → control-loop charge.
@@ -200,7 +201,14 @@ class ServeRuntime:
         charge see the same headroom) and ``charge_units`` = the miss
         fraction — cache-served units are never charged against a
         FluidController's SLO window, and the avoided share is recorded
-        on the controller for introspection."""
+        on the controller for introspection.
+
+        ``spec`` = (spec_k, draft_cost, verify_cost, planned_rounds,
+        planned_tokens) installs a speculative-decoding plan on the
+        record: the charge swaps the planned spec tokens' ap_cost for
+        the planned rounds' draft + verify pricing
+        (``CostRecord.axis_planned``); :meth:`finish_record` reconciles
+        against the rounds that actually ran."""
         if eff is None:
             eff = self.admission_budget(requested)
         wv, av = self.controller.resolve(jnp.asarray(eff, jnp.float32))
@@ -211,7 +219,12 @@ class ServeRuntime:
         record.planned_units = units if charge_units is None \
             else charge_units
         record.admitted_tick = self._tick
-        self.charge(cost, record.planned_units)
+        if spec is not None:
+            (record.spec_k, record.draft_cost, record.verify_cost,
+             record.planned_spec_rounds, record.planned_spec_tokens) = spec
+        if isinstance(self.controller, FluidController):
+            self.controller.charge(
+                record.axis_planned(self.controller.budget_axis))
         if (charge_units is not None and charge_units != units
                 and isinstance(self.controller, FluidController)):
             axis = self.controller.budget_axis
@@ -308,16 +321,17 @@ class ServeRuntime:
         record.finished_s = time.time()
         record.finished_tick = self._tick
         self.stats.completed += 1
-        # admissions were charged their PLANNED units; a request that
-        # terminated early (eos) refunds the unused share, so the SLO
-        # window tracks the stream's real spend
+        # admissions were charged their PLANNED cost; a request that
+        # terminated early (eos) — or whose speculative rounds diverged
+        # from the plan (acceptance variance) — refunds/charges the
+        # difference, so the SLO window tracks the stream's real spend
         if (isinstance(self.controller, FluidController)
-                and record.ap_cost is not None
-                and record.ap_units != record.planned_units):
+                and record.ap_cost is not None):
             axis = self.controller.budget_axis
-            self.controller.reconcile(
-                axis_cost(record.ap_cost, axis, record.ap_units)
-                - axis_cost(record.ap_cost, axis, record.planned_units))
+            actual = record.axis_actual(axis)
+            planned = record.axis_planned(axis)
+            if actual != planned:
+                self.controller.reconcile(actual - planned)
         return record
 
     # ------------------------------------------------------------------

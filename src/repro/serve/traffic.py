@@ -33,6 +33,7 @@ a pattern through one LM engine via ``ServeRuntime.submit_at``/``run``.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -43,8 +44,8 @@ from repro.serve.runtime import UNCONSTRAINED_BUDGET
 
 __all__ = [
     "TraceRequest", "Trace", "TraceReplayer", "TrafficResult",
-    "pattern_rates", "synth_trace", "payload_tokens", "payload_image",
-    "result_from_runtime", "summarize",
+    "pattern_rates", "synth_trace", "dump_trace", "load_trace",
+    "payload_tokens", "payload_image", "result_from_runtime", "summarize",
 ]
 
 
@@ -94,7 +95,8 @@ class Trace:
 def pattern_rates(pattern: str, ticks: int, rate: float, *,
                   burst_mag: float = 10.0, burst_at: Optional[int] = None,
                   burst_len: int = 4, period: Optional[int] = None,
-                  depth: float = 0.9) -> np.ndarray:
+                  depth: float = 0.9, mmpp_up: float = 0.08,
+                  mmpp_down: float = 0.25, seed: int = 0) -> np.ndarray:
     """Expected-arrivals-per-tick series for a traffic pattern.
 
       * ``poisson`` — flat ``rate``.
@@ -104,6 +106,15 @@ def pattern_rates(pattern: str, ticks: int, rate: float, *,
       * ``spike``  — flat ``rate`` except a systematic burst of
         ``burst_mag * rate`` for ``burst_len`` ticks starting at
         ``burst_at`` (default: one third in).
+      * ``mmpp``   — two-state Markov-modulated Poisson process: a
+        hidden state chain switches between a calm state (rate
+        ``rate``) and a bursty state (``burst_mag * rate``) with
+        per-tick transition probabilities ``mmpp_up`` (calm→bursty) and
+        ``mmpp_down`` (bursty→calm) — bursts arrive at random times and
+        last a geometric number of ticks (mean ``1/mmpp_down``), unlike
+        ``spike``'s one systematic burst.  The chain draws from its own
+        seeded stream, so the series is byte-deterministic per seed and
+        independent of the arrival draws layered on top.
     """
     t = np.arange(ticks, dtype=np.float64)
     if pattern == "poisson":
@@ -116,20 +127,34 @@ def pattern_rates(pattern: str, ticks: int, rate: float, *,
         r = np.full((ticks,), float(rate))
         r[at:at + burst_len] = rate * burst_mag
         return r
+    if pattern == "mmpp":
+        rng = np.random.default_rng([int(seed), 0x33])
+        flips = rng.random(ticks)       # one draw per tick, state-agnostic
+        r = np.empty((ticks,), np.float64)
+        state = 0
+        for i in range(ticks):
+            r[i] = rate * (burst_mag if state else 1.0)
+            if state == 0:
+                state = 1 if flips[i] < mmpp_up else 0
+            else:
+                state = 0 if flips[i] < mmpp_down else 1
+        return r
     raise ValueError(f"unknown traffic pattern {pattern!r} "
-                     f"(poisson | diurnal | spike)")
+                     f"(poisson | diurnal | spike | mmpp | file)")
 
 
 def synth_trace(pattern: str = "poisson", *, ticks: int = 64,
                 rate: float = 1.0, seed: int = 0, repetition: float = 0.0,
                 burst_mag: float = 10.0, burst_at: Optional[int] = None,
                 burst_len: int = 4, period: Optional[int] = None,
-                depth: float = 0.9, cnn_frac: float = 0.0,
+                depth: float = 0.9, mmpp_up: float = 0.08,
+                mmpp_down: float = 0.25, cnn_frac: float = 0.0,
                 lm_archs: Sequence[str] = ("qwen3_4b",),
                 cnn_archs: Sequence[str] = ("resnet18",),
                 prompt_len: int = 8, max_new_tokens: int = 8,
                 budget: Optional[Sequence[float]] = None,
-                slo_edp: Optional[float] = None) -> Trace:
+                slo_edp: Optional[float] = None,
+                path: Optional[str] = None) -> Trace:
     """Synthesize a seeded, timestamped arrival schedule.
 
     Arrivals per tick are Poisson draws against the pattern's rate
@@ -141,12 +166,22 @@ def synth_trace(pattern: str = "poisson", *, ticks: int = 64,
     architectures draw uniformly from ``lm_archs`` / ``cnn_archs``.
     ``budget`` (cycled over arrivals) and ``slo_edp`` attach per-request
     budget/SLO metadata.  Same arguments + same seed → identical trace.
+
+    ``pattern="file"`` imports a JSONL trace instead (see
+    :func:`load_trace`); ``path`` names the file and the synthesis
+    knobs are ignored — payloads stay seeded off (seed, key), so a
+    replay of an imported trace is just as byte-deterministic.
     """
+    if pattern == "file":
+        if path is None:
+            raise ValueError('synth_trace(pattern="file") needs path=')
+        return load_trace(path, ticks=ticks or None, seed=seed)
     if not 0.0 <= repetition < 1.0:
         raise ValueError(f"repetition must be in [0, 1), got {repetition}")
     rates = pattern_rates(pattern, ticks, rate, burst_mag=burst_mag,
                           burst_at=burst_at, burst_len=burst_len,
-                          period=period, depth=depth)
+                          period=period, depth=depth, mmpp_up=mmpp_up,
+                          mmpp_down=mmpp_down, seed=seed)
     rng = np.random.default_rng([int(seed), 0xBF])
     counts = rng.poisson(np.maximum(rates, 0.0))
     occurrences: List[int] = []         # every key occurrence (repeat pool)
@@ -173,6 +208,81 @@ def synth_trace(pattern: str = "poisson", *, ticks: int = 64,
             i += 1
     return Trace(pattern=pattern, seed=int(seed), ticks=int(ticks),
                  rates=tuple(float(r) for r in rates),
+                 requests=tuple(requests))
+
+
+def dump_trace(trace: Trace, path: str) -> None:
+    """Write a trace as JSONL: one ``{"meta": ...}`` header line with
+    the trace-level fields, then one JSON object per arrival.  The
+    format round-trips through :func:`load_trace` bit for bit."""
+    with open(path, "w") as f:
+        f.write(json.dumps({"meta": {
+            "pattern": trace.pattern, "seed": trace.seed,
+            "ticks": trace.ticks}}) + "\n")
+        for r in trace.requests:
+            f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+
+
+def load_trace(path: str, *, ticks: Optional[int] = None,
+               seed: int = 0) -> Trace:
+    """Import a JSONL trace file (``synth_trace(pattern="file")``).
+
+    One JSON object per line; blank lines and ``#`` comments are
+    skipped.  Each arrival needs at least ``t`` (its tick); the other
+    :class:`TraceRequest` fields default like :func:`synth_trace`'s
+    (workload "lm", arch "qwen3_4b", prompt_len/max_new_tokens 8) and
+    ``key`` defaults to a fresh key per line — so a hand-written trace
+    of bare ``{"t": ...}`` lines replays.  An optional ``{"meta": ...}``
+    header (written by :func:`dump_trace`) restores pattern/seed/ticks.
+    Payload bytes stay a pure function of (seed, key), so an imported
+    trace replays byte-identically: same file + same seed → same
+    prompts, same schedule.  ``ticks`` is a floor on the trace span
+    (reporting windows); the realized per-tick arrival counts stand in
+    for the rate series."""
+    meta: Dict[str, object] = {}
+    requests: List[TraceRequest] = []
+    next_key = 0
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            obj = json.loads(line)
+            if "meta" in obj and "t" not in obj:
+                meta = dict(obj["meta"])
+                continue
+            if "t" not in obj:
+                raise ValueError(f"{path}:{ln}: arrival needs a tick "
+                                 f"field 't'")
+            t = int(obj["t"])
+            if t < 0:
+                raise ValueError(f"{path}:{ln}: negative tick {t}")
+            key = int(obj.get("key", next_key))
+            next_key = max(next_key, key) + 1
+            workload = str(obj.get("workload", "lm"))
+            requests.append(TraceRequest(
+                t=t, workload=workload,
+                arch=str(obj.get("arch", "qwen3_4b" if workload == "lm"
+                                 else "resnet18")),
+                key=key,
+                prompt_len=int(obj.get("prompt_len",
+                                       0 if workload == "cnn" else 8)),
+                max_new_tokens=int(obj.get(
+                    "max_new_tokens", 0 if workload == "cnn" else 8)),
+                budget=(None if obj.get("budget") is None
+                        else float(obj["budget"])),
+                slo_edp=(None if obj.get("slo_edp") is None
+                         else float(obj["slo_edp"]))))
+    requests.sort(key=lambda r: r.t)
+    span = max((r.t for r in requests), default=-1) + 1
+    n_ticks = max(int(meta.get("ticks", 0)), span, int(ticks or 0))
+    counts = np.zeros((max(n_ticks, 1),), np.float64)
+    for r in requests:
+        counts[r.t] += 1.0
+    return Trace(pattern=str(meta.get("pattern", "file")),
+                 seed=int(meta.get("seed", seed)),
+                 ticks=int(max(n_ticks, 1)),
+                 rates=tuple(float(c) for c in counts),
                  requests=tuple(requests))
 
 
