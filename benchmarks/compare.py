@@ -43,6 +43,14 @@ Refresh the baseline after an intentional perf/metric change::
 baseline IN PLACE (suites not re-run keep their baseline records);
 ``--write-baseline`` replaces the whole file with exactly the given
 suites (dropping any others) — use it only for a from-scratch rebuild.
+
+Both baseline writers first consult the static-analysis suite
+(DESIGN.md §12) and REFUSE to touch the baseline while it fails: a
+retrace regression must never be baselined into ``BENCH_baseline.json``.
+They read ``--analysis-status`` (the JSON ``repro.launch.analyze
+--json`` writes; CI hands it down) when present, else run the suite
+in-process.  The step summary notes the analysis status alongside the
+delta table.
 """
 from __future__ import annotations
 
@@ -209,6 +217,33 @@ def render(rows: List[dict], n_hard: int) -> str:
     return "\n".join(lines) + "\n"
 
 
+def analysis_status(path: Optional[str],
+                    run_if_missing: bool) -> Tuple[Optional[bool], str]:
+    """(ok, detail) from the static-analysis suite.
+
+    Reads the status JSON when it exists; otherwise runs the full suite
+    in-process when ``run_if_missing`` (the baseline-update gate), else
+    reports unknown (the diff path never pays the suite's runtime).
+    """
+    if path:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            passes = ",".join(sorted(data.get("passes", {})))
+            return bool(data.get("ok")), f"{path} [{passes}]"
+        except FileNotFoundError:
+            pass
+    if not run_if_missing:
+        return None, "not run (no status file)"
+    try:
+        from repro import analysis
+    except ImportError:
+        return False, "repro.analysis unavailable (need PYTHONPATH=src)"
+    res = analysis.run_suite()
+    n = sum(len(p.fresh) for p in res.passes)
+    return res.ok, f"suite run in-process ({n} finding(s))"
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=BASELINE)
@@ -225,6 +260,10 @@ def main(argv=None) -> int:
                     help="merge the --current suites into --baseline in "
                          "place (suites not re-run keep their baseline "
                          "records)")
+    ap.add_argument("--analysis-status", default="analysis_status.json",
+                    help="JSON written by `repro.launch.analyze --json`; "
+                         "baseline updates refuse when the suite failed "
+                         "(and run it in-process when the file is absent)")
     args = ap.parse_args(argv)
 
     currents = []
@@ -233,6 +272,14 @@ def main(argv=None) -> int:
             currents.append(json.load(f))
 
     if args.write_baseline or args.update_baseline:
+        ok, detail = analysis_status(args.analysis_status,
+                                     run_if_missing=True)
+        if not ok:
+            print(f"[compare] REFUSING baseline update: static analysis "
+                  f"suite failed ({detail}). Fix the findings (or "
+                  f"justify them in the analysis baseline) first — a "
+                  f"retrace regression must not be baselined.")
+            return 2
         merged = {}
         if args.update_baseline:
             try:
@@ -255,6 +302,10 @@ def main(argv=None) -> int:
         baseline = json.load(f)
     rows, n_hard = compare(baseline, currents)
     md = render(rows, n_hard)
+    ok, detail = analysis_status(args.analysis_status,
+                                 run_if_missing=False)
+    badge = {True: "PASS", False: "**FAIL**", None: "n/a"}[ok]
+    md += f"\nStatic analysis: {badge} ({detail})\n"
     print(md)
     if args.summary:
         with open(args.summary, "a") as f:

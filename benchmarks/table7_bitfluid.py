@@ -57,7 +57,6 @@ def main(full: bool = True) -> int:
     for name in ("int4", "low", "medium", "high", "int8"):
         r = reports[name]
         vec = HAWQV3_RESNET18[name]
-        gl = gemm_layers(resnet18())
         bits = per_layer_bits(resnet18(), vec)
         avg = sum(bits) / len(bits)
         ne = r.energy_j / base.energy_j

@@ -4,7 +4,6 @@ runtime precisions — the whole paper pipeline in one minute on CPU.
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.core import policy as pol

@@ -1,0 +1,553 @@
+"""JAX-specific AST linter (DESIGN.md §12, pass 1 of 4).
+
+Rules (each carries an ID + fix-hint; grandfathered findings live in
+``analysis/baseline.json``):
+
+* **HS101** — ``.item()`` / ``.tolist()`` on a device value inside a
+  registered hot scope (``registry.HOT_SCOPES``): a per-element host
+  sync on the serving tick path.
+* **HS102** — host conversion of a device value in a hot scope:
+  ``float()`` / ``int()`` / ``bool()`` / ``np.asarray`` / ``np.*``, or
+  passing a device value to a pricing call that converts internally
+  (``registry.SYNC_ARG_METHODS``).  The fix is almost always ONE
+  coalesced ``jax.device_get(...)`` per tick, or the cached host-side
+  helpers (``host_bits`` / ``_host_index`` / ``_config_cost``).
+* **HS103** — host control flow (``if`` / ``while`` / ``assert`` /
+  ``for``) over a device value in a hot scope: an implicit ``bool()``
+  sync, and a ConcretizationTypeError the moment the scope is traced.
+* **ND201** — iteration over a set (``for x in {...}``, comprehension
+  over ``set(...)``, ``tuple(<set>)``): hash-order nondeterminism in
+  modules that feed jitted programs.  ``sorted(<set>)`` is the fix and
+  is recognized as clean.
+* **RNG301** — unseeded RNG: ``np.random.default_rng()`` with no seed,
+  the legacy ``np.random.<fn>`` global generator, stdlib ``random.<fn>``.
+* **STAT401** — a bit width captured statically where a traced value is
+  expected: a jitted closure capturing a bit-named local from its
+  enclosing scope, or ``jax.jit(..., static_argnums/static_argnames)``
+  marking a bit-named parameter static.  This bakes one precision into
+  the compiled program — the exact hazard class the zero-retrace design
+  (paper §V.B) exists to prevent; the retrace auditor is the dynamic
+  complement of this rule.
+
+The host-sync dataflow is intraprocedural taint: device-ness seeds from
+``jnp.*`` / ``jax.*`` calls and ``registry.DEVICE_METHODS``, clears
+through ``registry.HOST_METHODS`` (``jax.device_get`` and the cached
+helpers), and a flagged conversion yields a HOST result — downstream
+use of the converted value is deliberately not re-flagged.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import registry
+from repro.analysis.common import (Finding, ParsedModule, dotted,
+                                   iter_modules, qualname_index, repo_root)
+
+LINT_SUBDIRS = ("src/repro",)
+# the analyzers themselves and the host-side CLIs are not serving code
+EXCLUDE_PREFIXES = ("src/repro/analysis/",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    hint: str
+
+
+RULES: Dict[str, Rule] = {r.id: r for r in [
+    Rule("HS101", "per-element host sync (.item()/.tolist()) in hot scope",
+         "batch the transfer: one jax.device_get((a, b, ...)) per tick"),
+    Rule("HS102", "host conversion of device value in hot scope",
+         "coalesce into one jax.device_get per tick, or use the cached "
+         "host-side helpers (host_bits/_host_index/_config_cost)"),
+    Rule("HS103", "host control flow on device value in hot scope",
+         "device_get once, branch on the host copy (or move the branch "
+         "into the traced program via jnp.where/lax.cond)"),
+    Rule("ND201", "set iteration order is nondeterministic",
+         "wrap in sorted(...): trace-feeding order must be stable "
+         "across processes"),
+    Rule("RNG301", "unseeded / global RNG construction",
+         "np.random.default_rng(seed) with an explicit seed (derive "
+         "from the experiment seed)"),
+    Rule("STAT401", "bit width captured statically in compiled program",
+         "pass bits as a traced argument (jnp.asarray) so one program "
+         "serves every precision configuration"),
+]}
+
+_LEGACY_NP_RANDOM = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "normal", "uniform", "seed",
+})
+_STDLIB_RANDOM = frozenset({
+    "random", "randint", "choice", "choices", "shuffle", "uniform",
+    "sample", "randrange", "getrandbits", "seed", "gauss",
+})
+_CONVERTERS = frozenset({"float", "int", "bool", "complex"})
+
+
+def _last_attr(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# HS101/HS102/HS103 — intraprocedural device-taint in hot scopes
+# ---------------------------------------------------------------------------
+
+class _TaintVisitor:
+    """Walks one hot function's statements in order, tracking which
+    local (dotted) names hold device values."""
+
+    def __init__(self, mod: ParsedModule, scope: str) -> None:
+        self.mod = mod
+        self.scope = scope
+        self.tainted: Set[str] = set()
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[str, int, str]] = set()
+
+    # -- findings ---------------------------------------------------------
+
+    def flag(self, rule: str, node: ast.AST, message: str) -> None:
+        key = (rule, node.lineno, message)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(Finding(
+            rule=rule, file=self.mod.relpath, line=node.lineno,
+            scope=self.scope, message=message, hint=RULES[rule].hint,
+            snippet=self.mod.snippet(node)))
+
+    # -- expression taint -------------------------------------------------
+
+    def taint_of(self, node: ast.AST) -> bool:
+        """True if evaluating ``node`` yields a device value.  Flags any
+        sync the evaluation itself performs."""
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            d = dotted(node)
+            return d in self.tainted if d else self.taint_of(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.taint_of(e) for e in node.elts)
+        if isinstance(node, ast.Subscript):
+            return self.taint_of(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.taint_of(node.left) or self.taint_of(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.taint_of(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.taint_of(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return (self.taint_of(node.left)
+                    or any(self.taint_of(c) for c in node.comparators))
+        if isinstance(node, ast.IfExp):
+            return self.taint_of(node.body) or self.taint_of(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.taint_of(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return any(self.taint_of(g.iter) for g in node.generators) \
+                or self.taint_of(node.elt)
+        if isinstance(node, ast.JoinedStr):
+            # f-string: formatting a device value is a sync
+            for v in node.values:
+                if isinstance(v, ast.FormattedValue) \
+                        and self.taint_of(v.value):
+                    self.flag("HS102", node,
+                              "formatting a device value forces a host "
+                              "sync")
+            return False
+        return False
+
+    def _args_taint(self, node: ast.Call) -> bool:
+        return (any(self.taint_of(a) for a in node.args)
+                or any(self.taint_of(k.value) for k in node.keywords))
+
+    def _call_taint(self, node: ast.Call) -> bool:
+        func = node.func
+        d = dotted(func) or ""
+        name = _last_attr(func)
+
+        # receiver.method() syncs
+        if isinstance(func, ast.Attribute):
+            recv_taint = self.taint_of(func.value)
+            if name in ("item", "tolist") and recv_taint:
+                self.flag("HS101", node,
+                          f".{name}() on a device value is a per-call "
+                          f"host sync")
+                return False
+        if d in registry.JAX_HOST_CALLS or name in registry.HOST_METHODS:
+            # host-returning: evaluate args (nested syncs still flag)
+            self._args_taint(node)
+            return False
+        if name in registry.SYNC_ARG_METHODS:
+            if self._args_taint(node):
+                self.flag("HS102", node,
+                          f"{name}() converts its arguments to host "
+                          f"numpy — passing device values syncs per "
+                          f"call")
+            return False
+        if name in _CONVERTERS and isinstance(func, ast.Name):
+            if self._args_taint(node):
+                self.flag("HS102", node,
+                          f"{name}() on a device value forces a host "
+                          f"sync")
+            return False
+        if d.startswith("np.") or d.startswith("numpy."):
+            if self._args_taint(node):
+                self.flag("HS102", node,
+                          f"{d.split('(')[0]} on a device value forces "
+                          f"a device->host transfer")
+            return False
+        if d.startswith("jnp.") or d.startswith("jax.") \
+                or name in registry.DEVICE_METHODS:
+            self._args_taint(node)
+            return True
+        # unknown callee: conservative propagate
+        return self._args_taint(node)
+
+    # -- statements -------------------------------------------------------
+
+    def assign_target(self, target: ast.AST, taint: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.tainted.add if taint
+             else self.tainted.discard)(target.id)
+        elif isinstance(target, ast.Attribute):
+            d = dotted(target)
+            if d:
+                (self.tainted.add if taint else self.tainted.discard)(d)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self.assign_target(e, taint)
+        elif isinstance(target, ast.Starred):
+            self.assign_target(target.value, taint)
+        # subscript stores don't bind a trackable name
+
+    def run_body(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            self.run_stmt(stmt)
+
+    def run_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            t = self.taint_of(stmt.value)
+            for target in stmt.targets:
+                self.assign_target(target, t)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self.assign_target(stmt.target, self.taint_of(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.taint_of(stmt.value) or self.taint_of(stmt.target)
+            self.assign_target(stmt.target, t)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            if self.taint_of(stmt.test):
+                self.flag("HS103", stmt.test,
+                          "branching on a device value is an implicit "
+                          "bool() host sync")
+            self.run_body(stmt.body)
+            self.run_body(stmt.orelse)
+            if isinstance(stmt, ast.While):    # second pass: loop taint
+                self.run_body(stmt.body)
+        elif isinstance(stmt, ast.Assert):
+            if self.taint_of(stmt.test):
+                self.flag("HS103", stmt.test,
+                          "asserting on a device value is an implicit "
+                          "bool() host sync")
+        elif isinstance(stmt, ast.For):
+            if self.taint_of(stmt.iter):
+                self.flag("HS103", stmt.iter,
+                          "iterating a device value syncs per element")
+                self.assign_target(stmt.target, False)
+            else:
+                self.assign_target(stmt.target, False)
+            self.run_body(stmt.body)
+            self.run_body(stmt.body)           # second pass: loop taint
+            self.run_body(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.taint_of(item.context_expr)
+                if item.optional_vars is not None:
+                    self.assign_target(item.optional_vars, False)
+            self.run_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run_body(stmt.body)
+            for h in stmt.handlers:
+                self.run_body(h.body)
+            self.run_body(stmt.orelse)
+            self.run_body(stmt.finalbody)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            if stmt.value is not None:
+                self.taint_of(stmt.value)
+        elif isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self.taint_of(stmt.exc)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self.assign_target(t, False)
+        # nested defs are visited when their own scope is analyzed
+
+
+def _check_hot_scopes(mod: ParsedModule) -> List[Finding]:
+    findings: List[Finding] = []
+    for node, qual in qualname_index(mod.tree).items():
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not registry.is_hot(mod.relpath, qual):
+            continue
+        v = _TaintVisitor(mod, qual)
+        v.run_body(node.body)
+        findings.extend(v.findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# ND201 — set-iteration nondeterminism
+# ---------------------------------------------------------------------------
+
+def _check_set_order(mod: ParsedModule) -> List[Finding]:
+    findings: List[Finding] = []
+    quals = qualname_index(mod.tree)
+    scopes: Dict[int, str] = {}
+
+    def scope_of(node: ast.AST, current: str) -> str:
+        return quals.get(node, current)
+
+    def flag(node: ast.AST, scope: str, what: str) -> None:
+        findings.append(Finding(
+            rule="ND201", file=mod.relpath, line=node.lineno, scope=scope,
+            message=f"{what} iterates a set in hash order",
+            hint=RULES["ND201"].hint, snippet=mod.snippet(node)))
+
+    def walk(node: ast.AST, scope: str) -> None:
+        scope = scope_of(node, scope)
+        if isinstance(node, ast.For) and _is_set_expr(node.iter):
+            flag(node.iter, scope, "for loop")
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            for g in node.generators:
+                if _is_set_expr(g.iter):
+                    # a set comprehension over a set re-hashes: order
+                    # nondeterminism only escapes via ordered outputs
+                    if not isinstance(node, (ast.SetComp, ast.DictComp)):
+                        flag(g.iter, scope, "comprehension")
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("list", "tuple") and node.args \
+                and _is_set_expr(node.args[0]):
+            flag(node, scope, f"{node.func.id}(...)")
+        for child in ast.iter_child_nodes(node):
+            walk(child, scope)
+
+    walk(mod.tree, "")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RNG301 — unseeded RNG construction
+# ---------------------------------------------------------------------------
+
+def _check_rng(mod: ParsedModule) -> List[Finding]:
+    findings: List[Finding] = []
+    quals = qualname_index(mod.tree)
+
+    def flag(node: ast.AST, scope: str, message: str) -> None:
+        findings.append(Finding(
+            rule="RNG301", file=mod.relpath, line=node.lineno, scope=scope,
+            message=message, hint=RULES["RNG301"].hint,
+            snippet=mod.snippet(node)))
+
+    def walk(node: ast.AST, scope: str) -> None:
+        scope = quals.get(node, scope)
+        if isinstance(node, ast.Call):
+            d = dotted(node.func) or ""
+            if d in ("np.random.default_rng", "numpy.random.default_rng") \
+                    and not node.args and not node.keywords:
+                flag(node, scope, "default_rng() without a seed draws "
+                                  "from OS entropy — runs are not "
+                                  "reproducible")
+            parts = d.split(".")
+            if len(parts) == 3 and parts[0] in ("np", "numpy") \
+                    and parts[1] == "random" \
+                    and parts[2] in _LEGACY_NP_RANDOM:
+                flag(node, scope, f"{d}() uses the legacy GLOBAL numpy "
+                                  f"generator (cross-module state)")
+            if len(parts) == 2 and parts[0] == "random" \
+                    and parts[1] in _STDLIB_RANDOM:
+                flag(node, scope, f"{d}() uses the stdlib global "
+                                  f"generator (cross-module state)")
+        for child in ast.iter_child_nodes(node):
+            walk(child, scope)
+
+    walk(mod.tree, "")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# STAT401 — static bit capture audit
+# ---------------------------------------------------------------------------
+
+def _local_bindings(fn: ast.AST) -> Set[str]:
+    """Names bound in ``fn``'s own scope: params + stores (nested defs'
+    internals excluded — their stores bind in the nested scope)."""
+    out: Set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        out.add(a.arg)
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.ClassDef)):
+                if not isinstance(child, ast.Lambda):
+                    out.add(child.name)
+                continue
+            if isinstance(child, ast.Name) \
+                    and isinstance(child.ctx, (ast.Store, ast.Del)):
+                out.add(child.id)
+            walk(child)
+
+    walk(fn)
+    return out
+
+
+def _loads(fn: ast.AST) -> Set[str]:
+    """Every Name load in ``fn``'s whole subtree (nested defs included:
+    a name free in a nested def propagates outward)."""
+    return {n.id for n in ast.walk(fn)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+def _jit_call_of(call: ast.Call) -> bool:
+    d = dotted(call.func) or ""
+    return d in ("jax.jit", "jit", "pjit", "jax.pjit")
+
+
+def _check_static_bits(mod: ParsedModule) -> List[Finding]:
+    findings: List[Finding] = []
+    quals = qualname_index(mod.tree)
+
+    def flag(node: ast.AST, scope: str, message: str) -> None:
+        findings.append(Finding(
+            rule="STAT401", file=mod.relpath, line=node.lineno, scope=scope,
+            message=message, hint=RULES["STAT401"].hint,
+            snippet=mod.snippet(node)))
+
+    def param_names(fn: ast.AST) -> List[str]:
+        a = fn.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    def check_static_marks(call: ast.Call, fn: Optional[ast.AST],
+                           scope: str) -> None:
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                if fn is None:
+                    continue
+                names = param_names(fn)
+                nums = []
+                v = kw.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) \
+                    else [v]
+                for e in elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, int):
+                        nums.append(e.value)
+                for i in nums:
+                    if i < len(names) and registry.is_bit_name(names[i]):
+                        flag(call, scope,
+                             f"static_argnums marks bit parameter "
+                             f"{names[i]!r} static — every distinct "
+                             f"width recompiles")
+            elif kw.arg == "static_argnames":
+                v = kw.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) \
+                    else [v]
+                for e in elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, str) \
+                            and registry.is_bit_name(e.value):
+                        flag(call, scope,
+                             f"static_argnames marks bit parameter "
+                             f"{e.value!r} static — every distinct "
+                             f"width recompiles")
+
+    def check_outer(outer: ast.AST, scope: str) -> None:
+        locals_ = _local_bindings(outer)
+        nested: Dict[str, ast.AST] = {}
+        for child in ast.walk(outer):
+            if child is not outer and isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                nested[child.name] = child
+        for call in ast.walk(outer):
+            if not (isinstance(call, ast.Call) and _jit_call_of(call)):
+                continue
+            fn = None
+            if call.args and isinstance(call.args[0], ast.Name):
+                fn = nested.get(call.args[0].id)
+            check_static_marks(call, fn, scope)
+            if fn is None:
+                continue
+            free = _loads(fn) - _local_bindings(fn)
+            captured = free & locals_
+            for name in sorted(captured):
+                if registry.is_bit_name(name):
+                    flag(call, scope,
+                         f"jitted closure {fn.name!r} captures "
+                         f"bit-named local {name!r} from its enclosing "
+                         f"scope — the width is baked in at trace time")
+
+    for node, qual in quals.items():
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            check_outer(node, qual)
+            # decorator form: @partial(jax.jit, static_argnames=...)
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    d = dotted(dec.func) or ""
+                    if _jit_call_of(dec):
+                        check_static_marks(dec, node, qual)
+                    elif d in ("functools.partial", "partial") \
+                            and dec.args and (dotted(dec.args[0]) or "") \
+                            in ("jax.jit", "jit"):
+                        check_static_marks(dec, node, qual)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+CHECKERS: List[Callable[[ParsedModule], List[Finding]]] = [
+    _check_hot_scopes, _check_set_order, _check_rng, _check_static_bits,
+]
+
+
+def lint_modules(modules: Sequence[ParsedModule]) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        if any(mod.relpath.startswith(p) for p in EXCLUDE_PREFIXES):
+            continue
+        for check in CHECKERS:
+            findings.extend(check(mod))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return findings
+
+
+def run_lint(root: Optional[str] = None) -> List[Finding]:
+    """Lint the whole ``src/repro`` tree; returns raw findings (the CLI
+    applies the baseline)."""
+    return lint_modules(iter_modules(root or repo_root(), LINT_SUBDIRS))

@@ -1,0 +1,302 @@
+"""Sharding checker (DESIGN.md §12, pass 3 of 4): every ``dist/sharding``
+pspec must divide the mesh for every config, at analysis time.
+
+``dist.api.logical_to_mesh`` deliberately falls back to replication when
+a dimension does not divide its logical axis — safe at run time, but it
+means a bad spec (or a config whose shapes silently stopped dividing)
+degrades to replicated execution with no error anywhere.  This pass
+builds the FULL ten configs' parameter / quantized-parameter / cache /
+bits / budgets / batch trees abstractly (``jax.eval_shape`` — no
+allocation, the 1T-param config audits in milliseconds) and resolves
+every leaf's spec against fake 1/2/4/8-device meshes, checking three
+things:
+
+* **SH601** (fatal) — a *resolved* PartitionSpec that is arithmetically
+  wrong: an axis not in the mesh, an axis consumed twice, or a sharded
+  dimension whose size does not divide the product of its mesh axes.
+  ``logical_to_mesh`` should make these impossible; this is the
+  independent re-verification.
+* **SH602** (fatal) — a leaf whose LOGICAL spec requests an axis that
+  exists in the mesh (size > 1) but was dropped by the divisibility
+  fallback: the config cannot actually shard the way ``sharding.py``
+  says it should, named down to config × mesh × leaf path × dim.
+* **SH603** (fatal) — the safety net: on the 2×2 mesh every config must
+  end up with at least one parameter leaf on ``model``, one on
+  ``data``, and one cache leaf on ``data`` — catching a refactor that
+  quietly neuters the placement rules without breaking any arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.common import Finding
+
+SHARDING_FILE = "src/repro/dist/sharding.py"
+
+# fake meshes at 1/2/4/8 devices, covering pure-dp, pure-tp, and mixed
+MESH_SHAPES: Tuple[Dict[str, int], ...] = (
+    {"data": 1},
+    {"data": 2}, {"model": 2},
+    {"data": 4}, {"model": 4}, {"data": 2, "model": 2},
+    {"data": 8}, {"model": 8}, {"data": 2, "model": 4},
+    {"data": 4, "model": 2},
+)
+
+SAFETY_NET_MESH: Dict[str, int] = {"data": 2, "model": 2}
+
+BATCH = 8            # divisible by every dp size above
+CACHE_LEN = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeMesh:
+    """Duck-types the two attributes ``dist.api``/``dist.sharding`` read
+    (``.shape`` dict and ``.axis_names``) — no devices required."""
+    axis_sizes: Tuple[Tuple[str, int], ...]
+
+    @property
+    def shape(self) -> Dict[str, int]:
+        return dict(self.axis_sizes)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.axis_sizes)
+
+
+def mesh_label(mesh: FakeMesh) -> str:
+    return "x".join(f"{n}{s}" for n, s in mesh.axis_sizes)
+
+
+def _prod(vals: Iterable[int]) -> int:
+    out = 1
+    for v in vals:
+        out *= v
+    return out
+
+
+def _path_str(path) -> str:
+    return ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _leaves(tree) -> List[Tuple[str, Tuple[int, ...], Tuple[str, ...]]]:
+    """(dotted path, shape, raw keys) for every array leaf."""
+    import jax
+
+    from repro.dist.sharding import _keys
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), tuple(leaf.shape), _keys(path))
+            for path, leaf in flat]
+
+
+# ---------------------------------------------------------------------------
+# Spec arithmetic (independent of dist.api's own implementation)
+# ---------------------------------------------------------------------------
+
+def check_resolved(spec, shape: Tuple[int, ...], mesh: FakeMesh,
+                   where: str) -> List[Finding]:
+    """SH601: re-verify one resolved PartitionSpec against the mesh."""
+    out: List[Finding] = []
+    entries = tuple(spec)
+    if len(entries) > len(shape):
+        out.append(Finding(
+            rule="SH601", file=SHARDING_FILE, line=0, scope=where,
+            message=f"spec {entries} has {len(entries)} entries for a "
+                    f"rank-{len(shape)} leaf {shape}",
+            hint="pspec builders must emit at most one entry per dim"))
+        return out
+    used: set = set()
+    for dim, entry in enumerate(entries):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            if a not in mesh.shape:
+                out.append(Finding(
+                    rule="SH601", file=SHARDING_FILE, line=0, scope=where,
+                    message=f"dim {dim} assigned axis {a!r} which is not "
+                            f"in mesh {mesh.shape}",
+                    hint="mesh_axes_for must filter to mesh.axis_names"))
+            elif a in used:
+                out.append(Finding(
+                    rule="SH601", file=SHARDING_FILE, line=0, scope=where,
+                    message=f"axis {a!r} consumed by two dims of {entries}",
+                    hint="each mesh axis may shard at most one dim"))
+            used.add(a)
+        size = _prod(mesh.shape[a] for a in axes if a in mesh.shape)
+        if size > 1 and shape[dim] % size != 0:
+            out.append(Finding(
+                rule="SH601", file=SHARDING_FILE, line=0, scope=where,
+                message=f"dim {dim} of shape {shape} not divisible by "
+                        f"{axes} (size {size}) in mesh {mesh.shape}",
+                hint="logical_to_mesh must replicate non-dividing dims"))
+    return out
+
+
+def dropped_axes(mesh: FakeMesh, logical: Tuple[Optional[str], ...],
+                 shape: Tuple[int, ...]) -> List[Tuple[int, str, int]]:
+    """Dims whose requested logical axis exists in the mesh (size > 1)
+    but was dropped by the divisibility fallback: mirrors
+    ``logical_to_mesh``'s consumption loop, reporting what it silently
+    replicated.  Returns (dim, logical name, axis size) triples."""
+    from repro.dist.api import mesh_axes_for
+
+    used: set = set()
+    fell: List[Tuple[int, str, int]] = []
+    for dim, name in enumerate(logical):
+        if name is None or dim >= len(shape):
+            continue
+        if shape[dim] <= 1:
+            continue        # replicating a singleton dim loses nothing
+        axes = tuple(a for a in mesh_axes_for(mesh, name)
+                     if a not in used)
+        size = _prod(mesh.shape[a] for a in axes)
+        if not axes or size <= 1:
+            continue                       # axis absent/trivial: no request
+        if shape[dim] % size != 0:
+            fell.append((dim, name, size))
+        else:
+            used.update(axes)
+    return fell
+
+
+# ---------------------------------------------------------------------------
+# Abstract per-config state
+# ---------------------------------------------------------------------------
+
+def _abstract_state(cfg):
+    """(params, qparams, cache, bits, budgets, batch) as shape trees."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.retrace import abstract_cache, abstract_qparams
+    from repro.models import lm
+
+    params = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    qparams = abstract_qparams(cfg)
+    cache = abstract_cache(cfg, BATCH, CACHE_LEN)
+    nb = lm.n_bit_slots(cfg)
+    bits = jax.ShapeDtypeStruct((BATCH, nb), jnp.int32)
+    budgets = jax.ShapeDtypeStruct((BATCH,), jnp.float32)
+    batch = {"tokens": jax.ShapeDtypeStruct((BATCH, CACHE_LEN), jnp.int32)}
+    return params, qparams, cache, bits, budgets, batch
+
+
+def audit_config_sharding(name: str, meshes: Sequence[FakeMesh]
+                          ) -> Tuple[List[Finding], Dict[str, int]]:
+    """All pspec families for one FULL config across every mesh."""
+    from repro import configs
+    from repro.dist import api as dapi
+    from repro.dist import sharding as dsh
+
+    cfg = configs.get(name)
+    params, qparams, cache, bits, budgets, batch = _abstract_state(cfg)
+    findings: List[Finding] = []
+    stats = {"leaves": 0, "sharded": 0}
+
+    def logical_family(tag: str, leaves, pspec_of):
+        for path, shape, _keys_ in leaves:
+            for mesh in meshes:
+                logical = pspec_of(path, shape, _keys_)
+                resolved = dapi.logical_to_mesh(mesh, logical, shape)
+                where = f"{name}/{tag}/{path}@{mesh_label(mesh)}"
+                findings.extend(check_resolved(resolved, shape, mesh,
+                                               where))
+                for dim, lname, size in dropped_axes(mesh, logical,
+                                                     shape):
+                    findings.append(Finding(
+                        rule="SH602", file=SHARDING_FILE, line=0,
+                        scope=where,
+                        message=f"logical axis {lname!r} requested on "
+                                f"dim {dim} of {shape} but dropped: "
+                                f"{shape[dim]} %% {size} != 0",
+                        hint=f"config {name} cannot shard this leaf as "
+                             f"specified; fix the shape or the rule"))
+                stats["leaves"] += 1
+                stats["sharded"] += int(any(e is not None
+                                            for e in tuple(resolved)))
+
+    class _L:                       # minimal .ndim carrier for pspec fns
+        def __init__(self, shape):
+            self.shape = tuple(shape)
+            self.ndim = len(shape)
+
+    logical_family("params", _leaves(params),
+                   lambda p, s, k: dsh._logical_spec(k, len(s)))
+    logical_family("qparams", _leaves(qparams),
+                   lambda p, s, k: dsh._logical_spec(k, len(s)))
+    logical_family("bits", [("bits", tuple(bits.shape), ("bits",))],
+                   lambda p, s, k: dsh.bits_pspec(_L(s)))
+    logical_family("budgets",
+                   [("budgets", tuple(budgets.shape), ("budgets",))],
+                   lambda p, s, k: dsh.budgets_pspec(_L(s)))
+    logical_family("batch", _leaves(batch),
+                   lambda p, s, k: dsh.batch_pspec(_L(s)))
+
+    # cache specs come back as concrete PartitionSpecs with their own
+    # divisibility logic — arithmetic-check them directly
+    for path, shape, keys in _leaves(cache):
+        for mesh in meshes:
+            resolved = dsh._cache_leaf_spec(mesh, keys, _L(shape))
+            where = f"{name}/cache/{path}@{mesh_label(mesh)}"
+            findings.extend(check_resolved(resolved, shape, mesh, where))
+            stats["leaves"] += 1
+            stats["sharded"] += int(any(e is not None
+                                        for e in tuple(resolved)))
+
+    # safety net: the 2x2 mesh must actually place both axes
+    net = FakeMesh(tuple(sorted(SAFETY_NET_MESH.items())))
+
+    def placed(tree_leaves, spec_of, axis: str) -> bool:
+        for path, shape, keys in tree_leaves:
+            entries = tuple(spec_of(shape, keys))
+            for e in entries:
+                axes = e if isinstance(e, tuple) else (e,)
+                if axis in axes:
+                    return True
+        return False
+
+    def param_spec(shape, keys):
+        return dapi.logical_to_mesh(net, dsh._logical_spec(keys,
+                                                           len(shape)),
+                                    shape)
+
+    def cache_spec(shape, keys):
+        return dsh._cache_leaf_spec(net, keys, _L(shape))
+
+    for axis in ("model", "data"):
+        if not placed(_leaves(qparams), param_spec, axis):
+            findings.append(Finding(
+                rule="SH603", file=SHARDING_FILE, line=0,
+                scope=f"{name}/qparams@{mesh_label(net)}",
+                message=f"no quantized-param leaf sharded on {axis!r} "
+                        f"on the 2x2 mesh — placement rules are inert "
+                        f"for this config",
+                hint="check _logical_spec's key patterns against this "
+                     "config's param tree"))
+    if not placed(_leaves(cache), cache_spec, "data"):
+        findings.append(Finding(
+            rule="SH603", file=SHARDING_FILE, line=0,
+            scope=f"{name}/cache@{mesh_label(net)}",
+            message="no cache leaf sharded on 'data' on the 2x2 mesh "
+                    f"at B={BATCH}",
+            hint="check _cache_leaf_spec's batch-dim placement"))
+    return findings, stats
+
+
+def run_sharding(arch_ids: Optional[Sequence[str]] = None
+                 ) -> Tuple[List[Finding], Dict[str, Dict[str, int]]]:
+    """Audit every FULL config against the mesh matrix."""
+    from repro import configs
+
+    meshes = [FakeMesh(tuple(sorted(m.items()))) for m in MESH_SHAPES]
+    findings: List[Finding] = []
+    summary: Dict[str, Dict[str, int]] = {}
+    for name in (arch_ids if arch_ids is not None else configs.ARCH_IDS):
+        f, stats = audit_config_sharding(name, meshes)
+        findings.extend(f)
+        summary[name] = stats
+    return findings, summary

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.apsim import costmodel as cmod
 from repro.apsim.energy import TechParams, SRAM
-from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, _gemm_layer, area_mm2
+from repro.apsim.mapper import BFIMNAConfig, LR_CONFIG, _gemm_layer
 from repro.apsim.workloads import Layer, fc, gemm_layers
 
 

@@ -18,7 +18,7 @@ delta is recorded in EXPERIMENTS.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -170,7 +170,6 @@ def maximum_inplace(A: np.ndarray, B: np.ndarray, counter: PassCounter
 def reduce_sum(A: np.ndarray, M_out: int, counter: PassCounter) -> int:
     """Vertical-mode reduction: pairwise in-place adds (Eq. 4 structure)."""
     vals = [A[i:i + 1] for i in range(A.shape[0])]
-    width = A.shape[1]
     while len(vals) > 1:
         nxt = []
         for i in range(0, len(vals) - 1, 2):

@@ -17,7 +17,6 @@ and per-kind collective bytes — all per device, loop-exact.
 """
 from __future__ import annotations
 
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -7,7 +7,6 @@ drive both the dry-run lowering and the roofline accounting.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

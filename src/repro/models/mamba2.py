@@ -80,7 +80,6 @@ def ssd_chunked(xh, Bm, Cm, dt, a, h0, chunk: int):
     """SSD dual form.  xh (B,S,H,P); Bm/Cm (B,S,N); dt (B,S,H); a (H,)<0.
     h0: (B,H,P,N) initial state.  Returns (y (B,S,H,P), h_final)."""
     Bsz, S, H, Pd = xh.shape
-    N = Bm.shape[-1]
     Sp = -(-S // chunk) * chunk
     if Sp != S:
         # zero-pad: dt=0 -> decay 1 and no input; B=C=0 -> no contribution

@@ -13,7 +13,7 @@ State leaves mirror parameter sharding, so FSDP shards moments too.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

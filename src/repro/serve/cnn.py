@@ -122,8 +122,10 @@ class CNNServeEngine(ServeRuntime):
             amat = shd.shard_bits(amat, self.mesh)
         with self.compute_ctx():
             logits = self._fwd(self.qparams, images, wmat, amat)
-        wmat_h = np.asarray(wmat, np.int64)[:B]
-        amat_h = np.asarray(amat, np.int64)[:B]
+        # ONE coalesced device->host transfer per batch
+        wmat_h, amat_h, logits_h = jax.device_get((wmat, amat, logits))
+        wmat_h = wmat_h.astype(np.int64)[:B]
+        amat_h = amat_h.astype(np.int64)[:B]
         costs = self.pricer.price_matrix(wmat_h, amat_h)   # one-pass batch
         stats = []
         for i in range(B):
@@ -139,7 +141,7 @@ class CNNServeEngine(ServeRuntime):
         self.stats.admitted += B
         self.stats.batches += 1
         self.stats.images += B
-        return np.asarray(logits[:B]), stats
+        return logits_h[:B], stats
 
 
 def hawq_fidelity_sweep(network: str = "resnet18", image: int = 32,

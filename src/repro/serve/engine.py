@@ -691,17 +691,20 @@ class ServeEngine(ServeRuntime):
             first = self._sample_first(
                 logits, key, jnp.asarray([req.temperature], jnp.float32),
                 jnp.asarray([req.top_k], jnp.int32))
+            # the unavoidable per-admission sync (eos/stream bookkeeping
+            # needs the sampled token on the host) — exactly one transfer
+            first0 = int(jax.device_get(first)[0])
             record.slot = slot
-            record.tokens.append(int(first[0]))
+            record.tokens.append(first0)
             self.stats.tokens += 1
-            self.slots.occupy(slot, req.rid, tok=int(first[0]),
+            self.slots.occupy(slot, req.rid, tok=first0,
                               t=S + prefix_len, budget=record.budget_s,
                               temp=req.temperature, topk=req.top_k,
                               remaining=req.max_new_tokens - 1, k=k_req)
             admitted.append(req.rid)
             if self.slots["remaining"][slot] <= 0 or (
                     self.eos_id is not None
-                    and int(first[0]) == self.eos_id):
+                    and first0 == self.eos_id):
                 self._finish(slot)
         return admitted
 
@@ -775,8 +778,9 @@ class ServeEngine(ServeRuntime):
         topk = jnp.asarray(slots["topk"], jnp.int32)
         tok, t, pool.cache, toks = self._decode_scan(
             self.qparams, tok, t, pool.cache, wv, av, temp, topk, keys)
-        toks_h = np.asarray(toks)
-        slots["tok"][:] = np.asarray(tok)[:, 0].astype(np.int64)
+        # ONE coalesced device->host transfer per tick
+        tok_h, toks_h = jax.device_get((tok, toks))
+        slots["tok"][:] = tok_h[:, 0].astype(np.int64)
         slots["t"][:] += self.decode_block
         for slot in np.nonzero(active)[0]:
             rid = int(slots.rid[slot])
@@ -821,10 +825,11 @@ class ServeEngine(ServeRuntime):
             wv, av, k_eff, temp, topk, keys[SPEC_K_MAX],
             keys[SPEC_K_MAX + 1])
         pool.rollback(keep)
-        emitted_h = np.asarray(emitted)
-        count_h = np.asarray(count)
-        slots["tok"][:] = np.asarray(nxt).astype(np.int64)
-        slots["t"][:] = np.asarray(t_next).astype(np.int64)
+        # ONE coalesced device->host transfer per round
+        nxt_h, t_next_h, emitted_h, count_h = jax.device_get(
+            (nxt, t_next, emitted, count))
+        slots["tok"][:] = nxt_h.astype(np.int64)
+        slots["t"][:] = t_next_h.astype(np.int64)
         for slot in np.nonzero(active)[0]:
             rid = int(slots.rid[slot])
             st = self.requests[rid]

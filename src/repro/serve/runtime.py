@@ -212,10 +212,14 @@ class ServeRuntime:
         if eff is None:
             eff = self.admission_budget(requested)
         wv, av = self.controller.resolve(jnp.asarray(eff, jnp.float32))
-        cost = self.price_bits(wv, av)
+        # price through the cached host mirrors (host_bits == resolve by
+        # construction): the device vectors go straight to the compiled
+        # programs without ever being pulled back for bookkeeping
+        wv_h, av_h = self.host_bits(eff)
+        cost = self.price_bits(wv_h, av_h)
         record.budget_s = eff
         record.ap_cost = cost
-        record.mean_wbits = float(np.mean(np.asarray(wv, np.float64)))
+        record.mean_wbits = float(np.mean(np.asarray(wv_h, np.float64)))
         record.planned_units = units if charge_units is None \
             else charge_units
         record.admitted_tick = self._tick

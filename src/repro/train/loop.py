@@ -11,7 +11,6 @@ the backward automatically; §Perf iterates on the schedule.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Tuple
 
 import jax

@@ -229,7 +229,6 @@ def test_hawq_resnet18_one_compiled_program(rng):
     inline oracle."""
     params, layers = cnn.init_cnn("resnet18", KEY, image=32)
     qp = cnn.quantize_cnn_params(params, layers)
-    n = len(gemm_layers(layers))
     x = jnp.asarray(rng.normal(size=(2, 32, 32, 3)).astype(np.float32))
     traces = []
 

@@ -2,7 +2,6 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro import configs
 from repro.models import lm, mamba2, moe
@@ -51,7 +50,6 @@ def test_mamba_prefill_then_decode_continuity():
     toks = jax.random.randint(KEY, (1, 17), 0, cfg.vocab_size)
 
     # full forward on 17 tokens: logits for last position
-    loss_in = {"tokens": toks}
     cache = lm.empty_cache(cfg, 1, 32)
     lp, cache = lm.prefill(params, {"tokens": toks[:, :16]}, cfg, w, w, cache)
     ld, _ = lm.decode_step(params, toks[:, 16:17], jnp.asarray(16), cache,

@@ -99,7 +99,6 @@ def test_decode_matches_prefill_qwen3():
     """Teacher-forced prefill logits == step-by-step decode logits."""
     cfg = configs.get_smoke("qwen3_4b")
     params = lm.init_params(cfg, KEY)
-    qparams = lm.quantize_params(params, cfg)
     n = lm.n_bit_slots(cfg)
     wvec = avec = jnp.full((n,), 8, jnp.int32)
     toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)

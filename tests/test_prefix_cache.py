@@ -315,7 +315,7 @@ def test_fluid_controller_charges_only_miss_fraction(served):
     eng = _engine(served, cache=cache, controller=fluid())
     plain = _engine(served, controller=fluid())
     for e in (eng, plain):
-        rid = e.submit(prompt, max_new_tokens=4)
+        e.submit(prompt, max_new_tokens=4)
         e.run()
         rid2 = e.submit(prompt, max_new_tokens=4)
         e.run()

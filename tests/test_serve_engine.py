@@ -129,7 +129,6 @@ def test_per_request_sampling_params(served):
 
 
 def test_eos_stops_early(served):
-    cfg = served[0]
     eng = _engine(served, n_slots=1, prefill_len=8, decode_block=4)
     prompt = np.asarray([1, 2, 3], np.int64)
     rid = eng.submit(prompt, max_new_tokens=16, budget_s=10.0)

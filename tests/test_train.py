@@ -10,7 +10,7 @@ import pytest
 from repro import configs
 from repro.data.pipeline import SyntheticLM, make_batch
 from repro.models import lm
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.train.checkpoint import (latest_step, restore_checkpoint,
                                     save_checkpoint)
 from repro.train.loop import TrainConfig, make_train_step
