@@ -1,0 +1,205 @@
+"""Multi-device scale-out serving: the placement-planner headline
+experiment (DESIGN.md §13), persisted as ``BENCH_dist.json``.
+
+The PR 6 spike trace is replayed against the SAME smoke model served at
+1 / 2 / 4 / 8 (fake CPU) devices.  At each device count the engine gets
+a ``"data"`` mesh, a cost-driven :class:`repro.dist.placement
+.PlacementPlan` (``plan="auto"`` — the planner reads the controller's
+priced bit families and, with every device able to hold a full copy,
+fully replicates), and proportionally more serve slots (the capacity
+replication actually buys: every device holds every weight, so request
+ROWS shard across the data axis under ``shard_map`` and the admission
+pool grows with the mesh).  A short, heavy arrival burst backlogs the
+single-device engine; scale-out drains it in a few admission waves.
+
+Claims checked (rc != 0 on failure; device counts above the host's fake
+pool are skipped, and their claims with them):
+  * admitted throughput (completed / makespan ticks) scales
+    near-linearly: >= 3x at 8 devices vs 1, monotonic through 2 and 4;
+  * p99 latency under the spike is no worse at 8 devices than at 1;
+  * every plan at D > 1 is fully replicated (mean_replicas == D) and
+    every request's ledger row carries it (``plan_requests`` ==
+    completed, via ``accounting.aggregate``);
+  * nothing goes unserved and prefill/decode trace counters stay at 1
+    (scale-out must not break the zero-retrace property).
+
+Deterministic end to end: seeded arrivals, tick-domain latency, analytic
+AP pricing — the regression gate (benchmarks/compare.py) holds the
+throughput ratios as HARD metrics.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+LAST_RESULTS: dict = {}
+
+SEED = 11
+PROMPT = 8
+MAX_NEW = 8
+ARCH = "qwen3_4b"
+SLOTS_PER_DEV = 4
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _controller(n, cfgs, preds):
+    from repro.core import policy as pol
+
+    return pol.FluidController(dict(cfgs), dict(preds), n,
+                               budget_axis="edp", slo=float("inf"),
+                               window=64)
+
+
+def _engine(cfg, qparams, controller, n_devices):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.serve.engine import ServeEngine
+
+    mesh = (Mesh(np.asarray(jax.devices()[:n_devices]), ("data",))
+            if n_devices > 1 else None)
+    return ServeEngine(cfg, qparams, max_len=64, controller=controller,
+                       n_slots=SLOTS_PER_DEV * n_devices,
+                       prefill_len=PROMPT, decode_block=MAX_NEW,
+                       mesh=mesh, plan="auto" if mesh is not None else None)
+
+
+def scaling_sweep(cfg, qparams, n, cfgs, preds, *, full):
+    """Replay one seeded spike trace per device count; measure the
+    admitted-throughput curve."""
+    import jax
+
+    from repro.serve import accounting as acct
+    from repro.serve import traffic as tf
+
+    avail = len(jax.devices())
+    counts = [d for d in DEVICE_COUNTS if d <= avail]
+    # the trace ends right after the burst: arrivals stop, so the
+    # makespan is DRAIN-dominated and throughput reflects capacity (a
+    # long steady tail would floor every makespan at the trace length)
+    ticks, rate, burst_mag, burst_len = ((10, 0.75, 60.0, 6) if full
+                                         else (6, 0.5, 60.0, 4))
+    burst_at = 2
+    trace = tf.synth_trace("spike", ticks=ticks, rate=rate, seed=SEED,
+                           burst_mag=burst_mag, burst_at=burst_at,
+                           burst_len=burst_len, prompt_len=PROMPT,
+                           max_new_tokens=MAX_NEW)
+    n_req = trace.n_requests
+    print(f"spike: {n_req} requests over {ticks} ticks, "
+          f"{burst_mag:.0f}x burst @[{burst_at}, {burst_at + burst_len}), "
+          f"devices available: {avail}")
+
+    per_dev = {}
+    for d in counts:
+        eng = _engine(cfg, qparams, _controller(n, cfgs, preds), d)
+        res = tf.TraceReplayer(trace, {ARCH: eng},
+                               use_budgets=False).replay()
+        rep = res.report(window=burst_len)
+        agg = acct.aggregate(eng.requests.values())
+        thr = rep["completed"] / rep["ticks"] if rep["ticks"] else 0.0
+        per_dev[d] = {
+            "engine": eng, "report": rep, "agg": agg,
+            "throughput": thr,
+            "plan": eng.plan.summary() if eng.plan is not None else None,
+        }
+        print(f"  D={d}: makespan {rep['ticks']:3d} ticks, throughput "
+              f"{thr:5.2f} req/tick, p50/p99 latency "
+              f"{rep['p50_latency_ticks']:.0f}/"
+              f"{rep['p99_latency_ticks']:.0f} ticks, queue peak "
+              f"{rep['queue_depth']['peak']}, mean EDP "
+              f"{agg['edp_per_unit_js']:.3e} J*s/unit, plan="
+              f"{per_dev[d]['plan']}")
+
+    base = per_dev[counts[0]]
+    ok = True
+    for d in counts:
+        pd = per_dev[d]
+        rep, agg, eng = pd["report"], pd["agg"], pd["engine"]
+        ok &= rep["unserved"] == 0
+        ok &= (eng.stats.prefill_traces == eng.stats.decode_traces == 1)
+        if d > 1:
+            ok &= pd["plan"] is not None and pd["plan"]["fully_replicated"]
+            ok &= pd["plan"]["mean_replicas"] == d
+            ok &= agg["plan_requests"] == rep["completed"]
+            ok &= agg["plan_mean_replicas"] == float(d)
+
+    ratios = {d: per_dev[d]["throughput"] / base["throughput"]
+              for d in counts if d > 1}
+    floors = {2: 1.5, 4: 2.5, 8: 3.0}
+    prev = 1.0
+    for d, r in sorted(ratios.items()):
+        print(f"  throughput ratio {d}dev/1dev: {r:.2f}x (floor "
+              f"{floors[d]}x)")
+        ok &= r >= floors[d] and r >= prev
+        prev = r
+    if 8 in ratios:
+        ok &= (per_dev[8]["report"]["p99_latency_ticks"]
+               <= base["report"]["p99_latency_ticks"])
+
+    metrics = {
+        "n_requests": n_req, "ticks": ticks, "burst_mag": burst_mag,
+        "devices": counts,
+    }
+    for d in counts:
+        rep = per_dev[d]["report"]
+        metrics[f"admitted_throughput_{d}dev"] = round(
+            per_dev[d]["throughput"], 4)
+        metrics[f"p99_latency_ticks_{d}dev"] = rep["p99_latency_ticks"]
+        metrics[f"makespan_ticks_{d}dev"] = rep["ticks"]
+        metrics[f"edp_per_unit_js_{d}dev"] = per_dev[d]["agg"][
+            "edp_per_unit_js"]
+    for d, r in ratios.items():
+        metrics[f"throughput_ratio_{d}dev"] = round(r, 4)
+    detail = {"metrics": metrics,
+              "plans": {str(d): per_dev[d]["plan"] for d in counts},
+              "reports": {str(d): per_dev[d]["report"] for d in counts}}
+    return ok, metrics, detail
+
+
+def main(full: bool = False, out: str = "BENCH_dist.json") -> int:
+    import jax
+
+    from repro import configs
+    from repro.core import policy as pol
+    from repro.models import lm
+    from repro.serve import predict_table
+
+    t0 = time.time()
+    cfg = configs.get_smoke(ARCH)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = lm.quantize_params(params, cfg)
+    n = lm.n_bit_slots(cfg)
+    cfgs = {"int4": pol.fixed(4), "int8": pol.fixed(8)}
+    preds = predict_table(lm.layer_gemm_dims(cfg), cfgs, axis="edp",
+                          units=PROMPT + MAX_NEW,
+                          head=lm.head_gemm_dims(cfg))
+
+    ok, m, d = scaling_sweep(cfg, qparams, n, cfgs, preds, full=full)
+
+    record = {
+        "suite": "dist" + ("-full" if full else "-smoke"),
+        "total_seconds": round(time.time() - t0, 3),
+        "modules": {"scaling_sweep": {"rc": 0 if ok else 1, **d}},
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[dist] wrote {out}")
+
+    LAST_RESULTS.clear()
+    LAST_RESULTS.update({"scaling_sweep": m})
+    print(f"claims (fully-replicated plans scale admitted throughput "
+          f">= 3x at 8 devices, p99 no worse, zero retraces): "
+          f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size trace (nightly); default smoke sizes")
+    ap.add_argument("--out", default="BENCH_dist.json")
+    args = ap.parse_args()
+    raise SystemExit(main(full=args.full, out=args.out))

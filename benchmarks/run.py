@@ -32,11 +32,11 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     full = args.full or not args.smoke
 
-    from benchmarks import (calibrate, cnn_serve, fig5_runtimes,
-                            fig6_technology, fig7_dse, fig8_breakdown,
-                            grouped_dispatch, prefix_cache, roofline,
-                            serve_runtime, serve_throughput, spec_decode,
-                            table7_bitfluid, table8_sota,
+    from benchmarks import (calibrate, cnn_serve, dist_scaling,
+                            fig5_runtimes, fig6_technology, fig7_dse,
+                            fig8_breakdown, grouped_dispatch, prefix_cache,
+                            roofline, serve_runtime, serve_throughput,
+                            spec_decode, table7_bitfluid, table8_sota,
                             traffic_elasticity)
     mods = [
         ("calibrate", calibrate),
@@ -53,6 +53,7 @@ def main(argv=None) -> int:
         ("traffic_elasticity", traffic_elasticity),
         ("prefix_cache", prefix_cache),
         ("spec_decode", spec_decode),
+        ("dist_scaling", dist_scaling),
     ]
     if not (args.skip_roofline or args.smoke):
         mods.append(("roofline", roofline))

@@ -86,8 +86,8 @@ DEVICE_METHODS = frozenset({
     # controller / sharding
     "resolve", "shard_bits", "shard_budgets", "shard_batch", "device_put",
     # ServeEngine compiled programs + helpers
-    "_prefill", "_prefill_row", "_decode_scan", "_decode_one",
-    "_draft", "_verify", "_sample_first", "_extend_row",
+    "_prefill", "_prefill_row", "_decode_scan", "_decode_scan_sh",
+    "_decode_one", "_draft", "_verify", "_sample_first", "_extend_row",
     "_bits", "_batch_bits", "_draft_bits", "_split_key",
     # CNN compiled program
     "_fwd",

@@ -155,14 +155,23 @@ def _default_controller(n: int):
 # ---------------------------------------------------------------------------
 
 def _build_engine(cfg):
+    from repro import dist
     from repro.models import lm
     from repro.serve.engine import ServeEngine
 
     spec_ok = (cfg.family in lm.SPEC_CHUNK_FAMILIES
                and not cfg.sliding_window)
+    controller = _default_controller(lm.n_bit_slots(cfg))
+    # audit WITH placement enabled: an 8-device fully-replicated plan
+    # attached to the engine must not change any compiled program's
+    # signature (plans amortize host-side pricing; they never enter a
+    # jaxpr)
+    plan = dist.plan_for_controller(
+        controller, lm.layer_gemm_dims(cfg), n_devices=8,
+        head=lm.head_gemm_dims(cfg))
     return ServeEngine(
         cfg, abstract_qparams(cfg), max_len=MAX_LEN,
-        controller=_default_controller(lm.n_bit_slots(cfg)),
+        controller=controller, plan=plan,
         n_slots=N_SLOTS, prefill_len=PREFILL_LEN,
         decode_block=DECODE_BLOCK,
         spec_k=2 if spec_ok else None,

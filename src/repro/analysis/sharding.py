@@ -8,8 +8,10 @@ degrades to replicated execution with no error anywhere.  This pass
 builds the FULL ten configs' parameter / quantized-parameter / cache /
 bits / budgets / batch trees abstractly (``jax.eval_shape`` — no
 allocation, the 1T-param config audits in milliseconds) and resolves
-every leaf's spec against fake 1/2/4/8-device meshes, checking three
-things:
+every leaf's spec against fake 1/2/4/8-device meshes — including the
+placement-plan override families (``_logical_spec(..., plan=...)`` with
+a fully-replicated and a partial 8-device ``PlacementPlan``) — checking
+three things:
 
 * **SH601** (fatal) — a *resolved* PartitionSpec that is arithmetically
   wrong: an axis not in the mesh, an axis consumed twice, or a sharded
@@ -228,6 +230,29 @@ def audit_config_sharding(name: str, meshes: Sequence[FakeMesh]
                    lambda p, s, k: dsh._logical_spec(k, len(s)))
     logical_family("qparams", _leaves(qparams),
                    lambda p, s, k: dsh._logical_spec(k, len(s)))
+
+    # placement-plan overrides (dist/placement.py): the plan-aware pspec
+    # path must resolve on every mesh too.  A fully-replicated 8-device
+    # plan forces all-None on planned leaves (trivially divisible but
+    # still arithmetic-checked); a partial plan must fall back to the
+    # base rules UNCHANGED — both audited with the same SH601/SH602
+    # machinery as the base families.
+    from repro.dist import placement as dpl
+    from repro.models import lm as lmod
+
+    gd = lmod.layer_gemm_dims(cfg)
+    rep = [8] * len(gd)
+    plan_full = dpl.plan_placement(
+        gd, rep, rep, n_devices=8, head=lmod.head_gemm_dims(cfg))
+    plan_part = dpl.plan_placement(
+        gd, rep, rep, n_devices=8, head=lmod.head_gemm_dims(cfg),
+        memory_budget=1.5)
+    logical_family(
+        "qparams+plan_full", _leaves(qparams),
+        lambda p, s, k: dsh._logical_spec(k, len(s), plan=plan_full))
+    logical_family(
+        "qparams+plan_partial", _leaves(qparams),
+        lambda p, s, k: dsh._logical_spec(k, len(s), plan=plan_part))
     logical_family("bits", [("bits", tuple(bits.shape), ("bits",))],
                    lambda p, s, k: dsh.bits_pspec(_L(s)))
     logical_family("budgets",

@@ -172,6 +172,58 @@ class BudgetController:
         default=None, init=False, repr=False, compare=False)
     _lats: Optional[jnp.ndarray] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    # placement co-decision state (adopt_plan): the adopted plan plus
+    # the per-config prediction scale it applied
+    _plan: Optional[object] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    plan_gain: Optional[Dict[str, float]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def adopt_plan(self, plan, pricer) -> None:
+        """Re-price the prediction table under a placement plan — the
+        precision-vs-replication co-decision (DESIGN.md §13).
+
+        Each registered config's predicted budget-axis cost is scaled by
+        the ratio its PLAN-amortized priced cost bears to its base cost
+        (``PlacementPlan.price`` divides per-entry latency by replicas;
+        energy is unchanged).  Replication makes every config look —
+        honestly — cheaper on latency/EDP axes, so the same budget or
+        SLO headroom now resolves HIGHER bits: the plan trades its
+        replica memory for precision.  ``pricer`` is the runtime's
+        cached :class:`~repro.serve.accounting.BitVectorPricer` (same
+        gemms/head the predictions were built from, so predictions and
+        admission charges stay in lockstep)."""
+        if self._plan is plan:
+            return                      # idempotent re-adoption
+        if self._plan is not None:
+            raise ValueError("controller already adopted a different "
+                             "placement plan; build a fresh controller "
+                             "to re-plan")
+        import numpy as np
+
+        def _axis_val(cost) -> float:
+            if self.budget_axis == "latency":
+                return cost.latency_s
+            if self.budget_axis == "energy":
+                return cost.energy_j
+            return cost.energy_j * cost.latency_s
+
+        gain: Dict[str, float] = {}
+        for name, p in self.configs.items():
+            wv, av = p.vectors(self.n_layers)
+            base = pricer.price(np.asarray(wv), np.asarray(av))
+            planned = plan.price(base)
+            b = _axis_val(base)
+            ratio = _axis_val(planned) / b if b > 0 else 1.0
+            gain[name] = ratio
+            self.predicted_latency_s[name] *= ratio
+        self._plan = plan
+        self.plan_gain = gain
+        # prediction values moved: drop the admission-path caches (the
+        # config order is re-derived from the scaled table)
+        self._order = None
+        self._tables = None
+        self._lats = None
 
     def order(self) -> list:
         if self._order is None:
@@ -274,6 +326,21 @@ class FluidController(BudgetController):
                                    # the prefix-cache tier (hits charge only
                                    # their miss fraction; this tracks the
                                    # difference — introspection, not spend)
+    # ---- draft-bit autotuning (DESIGN.md §11 stretch): the closed loop
+    # watches an EMA of the speculative accept rate and shifts the DRAFT
+    # configuration index — low acceptance means the cheap drafts are
+    # being rejected (wasted draft+verify spend), so drafting moves to a
+    # higher-bit config; high acceptance means the drafts are already
+    # good enough and a cheaper config would do.  Off by default (the
+    # PR 8 spec-decode baselines stay byte-stable).
+    draft_autotune: bool = False
+    draft_ema_alpha: float = 0.2   # EMA smoothing of per-round accept rates
+    draft_accept_low: float = 0.45     # EMA below this: raise draft bits
+    draft_accept_high: float = 0.85    # EMA above this: lower draft bits
+    draft_accept_ema: float = -1.0     # -1 = no observation yet (reset
+                                       # after each shift: hysteresis)
+    draft_shift: int = 0           # config-index offset applied to the
+                                   # engine's base draft configuration
 
     def headroom(self, pending: int = 1) -> float:
         """Per-admission share of the remaining window budget.
@@ -341,6 +408,30 @@ class FluidController(BudgetController):
         if frac >= 0.10:
             return 2
         return 0
+
+    def observe_accept(self, rate: float) -> None:
+        """Feed one speculative round's accept rate (accepted/drafted)
+        into the draft-bit autotuner.  EMA-smoothed; when the average
+        leaves the [low, high] deadband the draft config index shifts by
+        one (up = more bits on low acceptance, down = fewer on high) and
+        the EMA resets so the next decision waits for fresh evidence
+        under the new bits (hysteresis).  The engine clamps the final
+        index into its config range, so the shift itself only needs a
+        loose clamp here."""
+        if not self.draft_autotune:
+            return
+        r = min(max(float(rate), 0.0), 1.0)
+        a = self.draft_ema_alpha
+        if self.draft_accept_ema < 0.0:
+            self.draft_accept_ema = r
+        else:
+            self.draft_accept_ema = (1.0 - a) * self.draft_accept_ema + a * r
+        if self.draft_accept_ema < self.draft_accept_low:
+            self.draft_shift = min(self.draft_shift + 1, 8)
+            self.draft_accept_ema = -1.0
+        elif self.draft_accept_ema > self.draft_accept_high:
+            self.draft_shift = max(self.draft_shift - 1, -8)
+            self.draft_accept_ema = -1.0
 
     def record_saved(self, amount: float) -> None:
         """Track budget-axis cost a cache hit avoided charging.  The

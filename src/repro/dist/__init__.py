@@ -7,7 +7,10 @@ code runs on a CPU test, a single host, or a multi-pod production mesh.
 :mod:`repro.dist.sharding` holds the path-based parameter/optimizer/
 batch/cache placement rules used by the launchers and the serving engine.
 """
-from repro.dist import api, sharding                       # noqa: F401
+from repro.dist import api, placement, sharding            # noqa: F401
 from repro.dist.api import (active_mesh, constrain,        # noqa: F401
                             constrain_heads, dp_size, logical_to_mesh,
+                            manual_mode, mesh_axes_for, shard_map_compat,
                             tp_size, use_mesh)
+from repro.dist.placement import (PlacementPlan,           # noqa: F401
+                                  plan_for_controller, plan_placement)

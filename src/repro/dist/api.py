@@ -24,6 +24,7 @@ from __future__ import annotations
 import contextlib
 import math
 import threading
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -79,6 +80,28 @@ def active_mesh():
     return _jax_context_mesh()
 
 
+@contextlib.contextmanager
+def manual_mode():
+    """Mark the enclosed trace as running INSIDE a ``shard_map`` body.
+
+    ``with_sharding_constraint`` on a mesh axis is illegal under manual
+    (per-device) execution — the axis is already consumed by the shard
+    map — so :func:`constrain`/:func:`constrain_heads` become identity
+    while this flag is up.  Engines wrap their shard-mapped program
+    bodies in it (thread-local, trace-time: the flag is read while the
+    body traces, never at run time)."""
+    prev = getattr(_local, "manual", False)
+    _local.manual = True
+    try:
+        yield
+    finally:
+        _local.manual = prev
+
+
+def in_manual_mode() -> bool:
+    return getattr(_local, "manual", False)
+
+
 def dp_size(mesh=None) -> int:
     """Total data-parallel ways of the active (or given) mesh."""
     mesh = mesh if mesh is not None else active_mesh()
@@ -117,13 +140,22 @@ def mesh_axes_for(mesh, logical: Optional[str]) -> Tuple[str, ...]:
     return tuple(out)
 
 
+# divisibility fallbacks already warned about (one-shot per distinct
+# (logical axis, mesh axes, dim, shape) — a serving loop resolves the
+# same specs every tick and must not spam)
+_warned_fallbacks: set = set()
+
+
 def logical_to_mesh(mesh, logical_axes: Sequence[Optional[str]],
                     shape: Sequence[int]) -> P:
     """Resolve per-dimension logical axes into a PartitionSpec.
 
     Per-dimension divisibility fallback: if the dim size does not divide
-    the product of the mapped mesh-axis sizes, that dimension replicates.
-    A mesh axis is consumed at most once per spec (first dim wins).
+    the product of the mapped mesh-axis sizes, that dimension replicates
+    — with a one-shot RuntimeWarning naming the axis and shape, so a
+    half-sharded placement is visible instead of discovered via
+    benchmarks.  A mesh axis is consumed at most once per spec (first
+    dim wins).
     """
     assert len(logical_axes) == len(shape), (logical_axes, shape)
     used: set = set()
@@ -133,6 +165,17 @@ def logical_to_mesh(mesh, logical_axes: Sequence[Optional[str]],
                      if a not in used)
         size = math.prod(mesh.shape[a] for a in axes) if axes else 0
         if not axes or size <= 1 or dim % size != 0:
+            if axes and size > 1 and dim > 1:
+                # a real sharding request fell back (absent/trivial axes
+                # and singleton dims lose nothing — stay silent there)
+                key = (logical, axes, int(dim), tuple(shape))
+                if key not in _warned_fallbacks:
+                    _warned_fallbacks.add(key)
+                    warnings.warn(
+                        f"logical axis {logical!r} -> mesh axes "
+                        f"{axes} (size {size}) does not divide dim "
+                        f"{dim} of shape {tuple(shape)}; replicating "
+                        f"this dimension", RuntimeWarning, stacklevel=2)
             entries.append(None)
             continue
         used.update(axes)
@@ -163,9 +206,10 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
 
 
 def constrain(x, logical_axes: Sequence[Optional[str]]):
-    """``with_sharding_constraint`` in logical axes; identity off-mesh."""
+    """``with_sharding_constraint`` in logical axes; identity off-mesh
+    and inside ``shard_map`` bodies (see :func:`manual_mode`)."""
     mesh = active_mesh()
-    if mesh is None:
+    if mesh is None or in_manual_mode():
         return x
     spec = logical_to_mesh(mesh, logical_axes, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

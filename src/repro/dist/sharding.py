@@ -42,10 +42,21 @@ def _keys(path) -> Tuple[str, ...]:
     return tuple(str(getattr(p, "key", p)) for p in path)
 
 
-def _logical_spec(keys: Sequence[str], nd: int) -> Tuple[Optional[str], ...]:
-    """Per-dimension logical axes for a parameter leaf at ``keys``."""
+def _logical_spec(keys: Sequence[str], nd: int,
+                  plan=None) -> Tuple[Optional[str], ...]:
+    """Per-dimension logical axes for a parameter leaf at ``keys``.
+
+    ``plan`` (a :class:`repro.dist.placement.PlacementPlan`) overrides
+    the base Megatron/FSDP rule with replication for leaves whose priced
+    entry the planner fully replicated — extra resident copies trade
+    memory for amortized latency (LRMP-style).  Entries the plan left at
+    one copy (or partially replicated — pspecs cannot express partial
+    replica counts) keep the base rule.
+    """
     if nd == 0:
         return ()
+    if plan is not None and plan.replicates(keys):
+        return (None,) * nd
     name = keys[-1]
     parent = keys[-2] if len(keys) >= 2 else ""
     if "lora" in keys and name in ("a", "b"):
@@ -72,16 +83,18 @@ def _logical_spec(keys: Sequence[str], nd: int) -> Tuple[Optional[str], ...]:
     return (None,) * nd
 
 
-def param_pspec(path, leaf) -> Tuple[Optional[str], ...]:
+def param_pspec(path, leaf, plan=None) -> Tuple[Optional[str], ...]:
     """Logical per-dimension spec for one parameter leaf (len == ndim)."""
-    return _logical_spec(_keys(path), leaf.ndim)
+    return _logical_spec(_keys(path), leaf.ndim, plan=plan)
 
 
-def param_shardings(params, mesh):
-    """NamedSharding pytree mirroring ``params`` (train or serve form)."""
+def param_shardings(params, mesh, plan=None):
+    """NamedSharding pytree mirroring ``params`` (train or serve form).
+    ``plan`` applies a placement planner's replication overrides."""
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(
-            mesh, logical_to_mesh(mesh, param_pspec(path, leaf), leaf.shape)),
+            mesh, logical_to_mesh(mesh, param_pspec(path, leaf, plan),
+                                  leaf.shape)),
         params)
 
 
@@ -240,7 +253,12 @@ def _cache_leaf_spec(mesh, keys: Tuple[str, ...], leaf) -> P:
     return P(*(None,) * leaf.ndim)                  # kpos etc.
 
 
-def cache_shardings(cache, mesh):
+def cache_shardings(cache, mesh, plan=None):
+    """Cache shardings; ``plan`` is accepted for call-site symmetry with
+    :func:`param_shardings` (a placement plan only moves WEIGHTS — the
+    cache's dp-on-batch placement is already what row-parallel scale-out
+    execution needs, so the base rules stand unchanged)."""
+    del plan
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(
             mesh, _cache_leaf_spec(mesh, _keys(path), leaf)),

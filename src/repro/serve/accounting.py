@@ -119,6 +119,13 @@ class CostRecord:
     planned_spec_rounds: int = 0        # rounds charged at admission
     planned_spec_tokens: int = 0        # tokens those rounds were planned
                                         # to deliver (full acceptance)
+    # placement (DESIGN.md §13): mean replica count of the plan this
+    # request's costs were amortized under (0 = no plan — costs are the
+    # base single-copy pricing); draft_wbits is the mean weight bits of
+    # the DRAFT config the autotuner had selected when this request's
+    # rounds ran (0 when it never drafted)
+    plan_replicas: float = 0.0
+    draft_wbits: float = 0.0
 
     @property
     def ap_units(self) -> int:
@@ -306,6 +313,7 @@ def aggregate(records: Iterable[CostRecord]) -> Dict[str, float]:
     draft = sum(r.draft_units for r in recs)
     accepted = sum(r.accepted_units for r in recs)
     spec_tokens = sum(r.spec_tokens for r in recs)
+    planned = sum(1 for r in recs if r.plan_replicas > 0)
     edp_total = sum(r.edp for r in recs)
     units = sum(r.ap_units for r in recs)
     return {
@@ -331,6 +339,18 @@ def aggregate(records: Iterable[CostRecord]) -> Dict[str, float]:
         "spec_rounds": sum(r.spec_rounds for r in recs),
         "spec_tokens": spec_tokens,
         "spec_accept_rate": round(accepted / draft, 4) if draft else 0.0,
+        # draft-bit autotuning: draft-unit-weighted mean weight bits of
+        # the draft configs actually used (0.0 when nothing drafted or
+        # the engine predates the autotuner)
+        "spec_draft_mean_wbits": round(
+            sum(r.draft_wbits * r.draft_units for r in recs) / draft, 4)
+        if draft else 0.0,
+        # placement-plan split: how many requests were priced under a
+        # replication plan, and the mean replica count they saw
+        "plan_requests": planned,
+        "plan_mean_replicas": round(
+            sum(r.plan_replicas for r in recs if r.plan_replicas > 0)
+            / planned, 4) if planned else 0.0,
         "edp_per_unit_js": edp_total / units if units else 0.0,
     }
 

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dist
 from repro.apsim import metrics as apm
 from repro.apsim.workloads import Layer, gemm_layers
 from repro.core.policy import BudgetController, PrecisionPolicy, fixed
@@ -53,7 +54,8 @@ class CNNServeEngine(ServeRuntime):
     def __init__(self, params: dict, layers: Sequence[Layer], *,
                  controller: Optional[BudgetController] = None,
                  policy: Optional[PrecisionPolicy] = None,
-                 max_batch: int = 8, container: str = "auto", mesh=None):
+                 max_batch: int = 8, container: str = "auto", mesh=None,
+                 plan=None):
         self.layers = list(layers)
         gl = gemm_layers(self.layers)
         self.n_gemm = len(gl)
@@ -61,9 +63,20 @@ class CNNServeEngine(ServeRuntime):
             pol = policy or fixed(8)
             controller = BudgetController({pol.name: pol}, {pol.name: 0.0},
                                           self.n_gemm)
+        if plan == "auto":
+            # resolve here rather than in the runtime: a CNN plan needs
+            # the per-layer NAMES so replicates() can match the
+            # per-layer-keyed qparams dicts (true LRMP-style per-layer
+            # replication — LM stacks can't differentiate layers)
+            m = mesh if mesh is not None else dist.active_mesh()
+            nd = dist.placement.mesh_device_count(m)
+            plan = (dist.placement.plan_for_controller(
+                        controller, apm.network_gemms(self.layers),
+                        n_devices=nd, names=tuple(l.name for l in gl))
+                    if nd > 1 else None)
         super().__init__(controller, self.n_gemm,
                          gemms=apm.network_gemms(self.layers), mesh=mesh,
-                         slot_desc="GEMM (conv/fc) layers")
+                         plan=plan, slot_desc="GEMM (conv/fc) layers")
         self.max_batch = max_batch
         wtab, _ = controller.stacked_tables()
         if container == "auto":
@@ -84,12 +97,43 @@ class CNNServeEngine(ServeRuntime):
         self.qparams = cnn.quantize_cnn_params(params, self.layers,
                                                container=container,
                                                int4_names=int4_names)
+        if self.mesh is not None:       # place serve weights once — the
+            # plan's fully-replicated layers override the base rules
+            self.qparams = jax.device_put(
+                self.qparams, shd.param_shardings(self.qparams, self.mesh,
+                                                  plan=self.plan))
+        # scale-out execution gate (mirrors ServeEngine): a fully-
+        # replicated plan runs the batched forward under shard_map with
+        # image ROWS split across dp — rows are independent, so the
+        # per-device compute is exact
+        self._dp_exec = None
+        if (self.plan is not None and self.mesh is not None
+                and self.plan.fully_replicated):
+            dpx = dist.mesh_axes_for(self.mesh, "dp")
+            dp = dist.dp_size(self.mesh)
+            if dpx and dp > 1 and max_batch % dp == 0:
+                self._dp_exec = dpx[0] if len(dpx) == 1 else tuple(dpx)
 
         def _fwd(qp, x, wmat, amat):
             self.stats.trace("forward")
             return cnn.cnn_forward(qp, x, self.layers, wmat, amat)
 
-        self._fwd = jax.jit(_fwd)
+        if self._dp_exec is not None:
+            from jax.sharding import PartitionSpec as P
+
+            dpx = self._dp_exec
+
+            def _fwd_manual(qp, x, wmat, amat):
+                with dist.manual_mode():
+                    return _fwd(qp, x, wmat, amat)
+
+            self._fwd = jax.jit(dist.shard_map_compat(
+                _fwd_manual, mesh=self.mesh,
+                in_specs=(P(), P(dpx, None, None, None),
+                          P(dpx, None), P(dpx, None)),
+                out_specs=P(dpx, None)))
+        else:
+            self._fwd = jax.jit(_fwd)
 
     def serve(self, images, budgets=None
               ) -> Tuple[np.ndarray, List[ImageStats]]:
@@ -126,7 +170,9 @@ class CNNServeEngine(ServeRuntime):
         wmat_h, amat_h, logits_h = jax.device_get((wmat, amat, logits))
         wmat_h = wmat_h.astype(np.int64)[:B]
         amat_h = amat_h.astype(np.int64)[:B]
-        costs = self.pricer.price_matrix(wmat_h, amat_h)   # one-pass batch
+        costs = self.price_matrix_bits(wmat_h, amat_h)     # one-pass batch
+        replicas = (self.plan.mean_replicas if self.plan is not None
+                    else 0.0)
         stats = []
         for i in range(B):
             rec = ImageStats(
@@ -134,6 +180,7 @@ class CNNServeEngine(ServeRuntime):
                 mean_wbits=float(np.mean(wmat_h[i])), ap_cost=costs[i],
                 wbits=tuple(int(b) for b in wmat_h[i]),
                 abits=tuple(int(b) for b in amat_h[i]),
+                plan_replicas=replicas,
                 submitted_s=submitted)
             self.requests[rec.rid] = rec
             self.finish_record(rec.rid)

@@ -125,7 +125,8 @@ class ServeEngine(ServeRuntime):
                  decode_block: int = 8, eos_id: Optional[int] = None,
                  seed: int = 0, prefix_cache: Optional[PrefixCache] = None,
                  spec_k: Optional[int] = None,
-                 draft_budget_s: Optional[float] = None):
+                 draft_budget_s: Optional[float] = None,
+                 plan=None):
         self.cfg = cfg
         # ---- speculative decoding (DESIGN.md §11): spec_k=None disables
         # entirely; an int enables self-drafting with that default depth
@@ -150,10 +151,10 @@ class ServeEngine(ServeRuntime):
                                 else float(draft_budget_s))
         self._draft_bits_c = None
         self._draft_price = None
+        self._draft_idx = -1            # config index the draft caches hold
+        self._draft_price_idx = -1
+        self._draft_wbits_f = 0.0       # mean weight bits of that config
         mesh = mesh if mesh is not None else dist.active_mesh()
-        if mesh is not None:            # place serve weights once, sharded
-            qparams = jax.device_put(
-                qparams, shd.param_shardings(qparams, mesh))
         self.qparams = qparams
         self.max_len = max_len
         self.n_slots = n_slots
@@ -181,7 +182,26 @@ class ServeEngine(ServeRuntime):
                 f"energy/EDP axes are for CNNServeEngine, or use a "
                 f"FluidController for an energy/EDP SLO loop)")
         super().__init__(controller, n, gemms=lm.layer_gemm_dims(cfg),
-                         head=lm.head_gemm_dims(cfg), mesh=mesh)
+                         head=lm.head_gemm_dims(cfg), mesh=mesh, plan=plan)
+        if self.mesh is not None:       # place serve weights once, sharded
+            # (after super().__init__ so an "auto" plan is resolved —
+            # fully-replicated plan entries override the FSDP/tp rules)
+            self.qparams = jax.device_put(
+                self.qparams, shd.param_shardings(self.qparams, self.mesh,
+                                                  plan=self.plan))
+        # scale-out execution gate (DESIGN.md §13): a fully-replicated
+        # plan makes every device hold every weight, so the decode block
+        # can run under shard_map with request ROWS split across the dp
+        # axis — manual per-device compute is exact (rows are
+        # independent; greedy sampling is bit-identical).  Partial plans
+        # and plan-less meshes keep the GSPMD path.
+        self._dp_exec = None
+        if (self.plan is not None and self.mesh is not None
+                and self.plan.fully_replicated):
+            dpx = dist.mesh_axes_for(self.mesh, "dp")
+            dp = dist.dp_size(self.mesh)
+            if dpx and dp > 1 and n_slots % dp == 0:
+                self._dp_exec = dpx[0] if len(dpx) == 1 else tuple(dpx)
         self.budget_s = jnp.asarray(1e9, jnp.float32)
         self.row_bits = cfg.family in lm.PER_ROW_BIT_FAMILIES
         self._key = jax.random.PRNGKey(seed)
@@ -363,6 +383,31 @@ class ServeEngine(ServeRuntime):
         self._prefill = jax.jit(_prefill_batch, donate_argnums=(2,))
         self._prefill_row = jax.jit(_prefill_row)
         self._decode_scan = jax.jit(_decode_scan, donate_argnums=(3,))
+        self._decode_scan_sh = None
+        if self._dp_exec is not None:
+            from jax.sharding import PartitionSpec as P
+
+            dpx = self._dp_exec
+
+            def _decode_scan_manual(*args):
+                # trace-time flag: constrain() inside the body must
+                # no-op (mesh axes are consumed by the shard_map)
+                with dist.manual_mode():
+                    return _decode_scan(*args)
+
+            # (q, tok, t, cache, wv, av, temp, topk, keys): weights
+            # replicated (the plan's point), every per-request operand
+            # split on its batch dim — cache leaves all carry batch at
+            # dim 1, so one prefix spec covers the whole pytree
+            self._decode_scan_sh = jax.jit(
+                dist.shard_map_compat(
+                    _decode_scan_manual, mesh=self.mesh,
+                    in_specs=(P(), P(dpx, None), P(dpx), P(None, dpx),
+                              P(dpx, None), P(dpx, None), P(dpx),
+                              P(dpx), P()),
+                    out_specs=(P(dpx, None), P(dpx), P(None, dpx),
+                               P(dpx, None))),
+                donate_argnums=(3,))
         self._decode_one = jax.jit(_decode_one, donate_argnums=(3,))
         self._draft = jax.jit(_draft_scan, donate_argnums=(3,))
         self._verify = jax.jit(_spec_verify, donate_argnums=(5,))
@@ -392,26 +437,46 @@ class ServeEngine(ServeRuntime):
         return self.price_bits(
             *self.controller.resolve(jnp.asarray(budget_s, jnp.float32)))
 
+    def _draft_index(self) -> int:
+        """Stacked-config index the drafts run at: the draft budget's
+        base config, offset by a FluidController's autotuner shift
+        (``observe_accept`` — accept-rate EMA moves draft bits up or
+        down), clamped into the config range."""
+        base = self._host_index(self._draft_budget_f)
+        shift = int(getattr(self.controller, "draft_shift", 0) or 0)
+        n = self.host_tables()[0].shape[0]
+        return min(max(base + shift, 0), n - 1)
+
     def _draft_bits(self):
-        """Device-side draft bit matrix (n_slots, L): the draft budget's
-        configuration broadcast across rows.  Resolved once — pure data
-        for the compiled draft program."""
-        if self._draft_bits_c is None:
-            wv, av = self.controller.resolve(
-                jnp.asarray(self._draft_budget_f, jnp.float32))
+        """Device-side draft bit matrix (n_slots, L): the current draft
+        config broadcast across rows.  Cached per config index — the
+        shapes never change, so an autotuner shift swaps pure data
+        without retracing."""
+        idx = self._draft_index()
+        if self._draft_bits_c is None or idx != self._draft_idx:
+            wtab, atab = self.controller.stacked_tables()
+            wv, av = wtab[idx], atab[idx]
             wv = jnp.broadcast_to(wv, (self.n_slots,) + wv.shape)
             av = jnp.broadcast_to(av, (self.n_slots,) + av.shape)
             if self.mesh is not None:
                 wv = shd.shard_bits(wv, self.mesh)
                 av = shd.shard_bits(av, self.mesh)
             self._draft_bits_c = (wv, av)
+            self._draft_idx = idx
+            self._draft_wbits_f = float(np.mean(self.host_tables()[0][idx]))
+            self._draft_price = None
         return self._draft_bits_c
 
     def _draft_pricing(self):
-        """Per-token AP cost of one draft step at the draft bits (cached)."""
-        if self._draft_price is None:
-            dwv, dav = self.host_bits(self._draft_budget_f)
-            self._draft_price = self.pricer.price(dwv, dav)
+        """Per-token AP cost of one draft step at the current draft bits
+        (cached per config index; plan-amortized when a placement plan
+        is installed)."""
+        idx = self._draft_index()
+        if self._draft_price is None or idx != self._draft_price_idx:
+            wtab, atab = self.host_tables()
+            self._draft_price = self.price_bits(wtab[idx], atab[idx])
+            self._draft_price_idx = idx
+            self._draft_wbits_f = float(np.mean(wtab[idx]))
         return self._draft_price
 
     def _resolve_draft_k(self, req: Request) -> int:
@@ -631,7 +696,7 @@ class ServeEngine(ServeRuntime):
             if k_req > 0 and req.max_new_tokens > 1:
                 swv, sav = self.host_bits(eff)
                 spec = (k_req, self._draft_pricing(),
-                        self.pricer.price_verify(swv, sav, k_req + 1),
+                        self.price_verify_bits(swv, sav, k_req + 1),
                         -(-(req.max_new_tokens - 1) // (k_req + 1)),
                         req.max_new_tokens - 1)
             else:
@@ -776,7 +841,9 @@ class ServeEngine(ServeRuntime):
         t = jnp.asarray(slots["t"], jnp.int32)
         temp = jnp.asarray(slots["temp"], jnp.float32)
         topk = jnp.asarray(slots["topk"], jnp.int32)
-        tok, t, pool.cache, toks = self._decode_scan(
+        decode = (self._decode_scan_sh if self._decode_scan_sh is not None
+                  else self._decode_scan)
+        tok, t, pool.cache, toks = decode(
             self.qparams, tok, t, pool.cache, wv, av, temp, topk, keys)
         # ONE coalesced device->host transfer per tick
         tok_h, toks_h = jax.device_get((tok, toks))
@@ -850,6 +917,12 @@ class ServeEngine(ServeRuntime):
                 st.verify_units += k_req + 1
                 st.accepted_units += take - 1
                 st.spec_tokens += len(new)
+                st.draft_wbits = self._draft_wbits_f
+                if isinstance(self.controller, FluidController):
+                    # close the draft-bit loop: this round's accept rate
+                    # (accepted drafts over drafted) feeds the EMA that
+                    # may shift the NEXT round's draft config
+                    self.controller.observe_accept((take - 1) / k_req)
             hit_eos = (self.eos_id is not None and new
                        and new[-1] == self.eos_id)
             if slots["remaining"][slot] <= 0 or hit_eos:

@@ -95,6 +95,7 @@ class ServeRuntime:
                  gemms: Optional[Sequence[Sequence]] = None,
                  head: Optional[Tuple[int, int]] = None,
                  mesh=None, starvation_ticks: int = 8,
+                 plan=None,
                  slot_desc: str = "bit-slot layers") -> None:
         if controller.n_layers != n_layers:
             raise ValueError(
@@ -116,6 +117,29 @@ class ServeRuntime:
             {min(max(int(v), 1), 8) for v in np.asarray(wtab).ravel()}))
         self.pricer = (BitVectorPricer(gemms, head=head)
                        if gemms is not None else None)
+        # placement plan (DESIGN.md §13): ``plan`` is a
+        # dist.placement.PlacementPlan, or "auto" to plan one here from
+        # the controller's bit families over this runtime's priced gemms
+        # and the mesh's device count (None when either is missing — a
+        # single device has nothing to replicate onto).  The plan
+        # amortizes every priced cost (see :meth:`_planned`) and, for a
+        # closed-loop controller, re-prices the prediction table so SLO
+        # headroom co-decides precision against replication.
+        if plan == "auto":
+            nd = dist.placement.mesh_device_count(self.mesh)
+            plan = (dist.placement.plan_for_controller(
+                        controller, gemms, n_devices=nd, head=head)
+                    if gemms is not None and nd > 1 else None)
+        self.plan = plan
+        # plan-amortized costs cached by base-object identity: the
+        # pricer returns ONE shared BitVectorCost per distinct vector
+        # (and keeps it alive in its own cache), so id() keys are stable
+        self._plan_costs: Dict[int, apm.BitVectorCost] = {}
+        if self.plan is not None and isinstance(controller, FluidController):
+            if self.pricer is None:
+                raise ValueError("a placement plan needs priced gemms "
+                                 "(pass gemms=) to co-decide precision")
+            controller.adopt_plan(self.plan, self.pricer)
         self.stats = RuntimeStats()
         self.requests: Dict[int, CostRecord] = {}
         self._next_rid = 0
@@ -134,36 +158,88 @@ class ServeRuntime:
     # Pricing / control loop
     # ------------------------------------------------------------------
 
+    def _planned(self, cost: apm.BitVectorCost) -> apm.BitVectorCost:
+        """Amortize a priced cost under the placement plan (identity
+        pass-through without one).  Cached by base-object identity —
+        callers rely on cost-object identity staying stable per distinct
+        bit vector, and the pricer's own cache keeps the base objects
+        (our id() keys) alive."""
+        if self.plan is None:
+            return cost
+        hit = self._plan_costs.get(id(cost))
+        if hit is None:
+            hit = self.plan.price(cost)
+            self._plan_costs[id(cost)] = hit
+        return hit
+
     def price_bits(self, wv, av) -> apm.BitVectorCost:
-        """AP cycles/energy of one resolved bit vector pair (cached)."""
-        return self.pricer.price(wv, av)
+        """AP cycles/energy of one resolved bit vector pair (cached;
+        plan-amortized when a placement plan is installed)."""
+        return self._planned(self.pricer.price(wv, av))
+
+    def price_verify_bits(self, wv, av, u: int) -> apm.BitVectorCost:
+        """Plan-amortized :meth:`BitVectorPricer.price_verify` — one
+        u-token verify chunk at this bit vector."""
+        return self._planned(self.pricer.price_verify(wv, av, u))
+
+    def price_matrix_bits(self, wmat, amat) -> List[apm.BitVectorCost]:
+        """Plan-amortized one-pass batch pricing (rows share cached
+        cost objects, like :meth:`price_bits`)."""
+        return [self._planned(c)
+                for c in self.pricer.price_matrix(wmat, amat)]
 
     def _host_index(self, budget: float) -> int:
         """Host-side mirror of ``controller.select`` for one budget
-        (prediction array cached as numpy — this runs per admission)."""
+        (prediction array cached as numpy — this runs per admission).
+        Built from the controller's prediction DICT, never its device
+        arrays: this helper must stay usable inside abstract traces
+        (the retrace auditor calls ``_draft_bits`` under make_jaxpr,
+        where any jnp constant becomes a tracer)."""
         if self._lats_np is None:
-            self._lats_np = np.asarray(self.controller.latency_array(),
-                                       np.float32)
+            self._lats_np = np.asarray(
+                [self.controller.predicted_latency_s[k]
+                 for k in self.controller.order()], np.float32)
         fits = np.nonzero(self._lats_np <= np.float32(budget))[0]
         return int(fits[-1]) if fits.size else 0
+
+    def host_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The controller's stacked (w, a) bit tables as cached host
+        numpy — admission-path bookkeeping indexes these, never device
+        arrays.  Expanded from the raw policy tuples (same
+        last-entry-extends rule as ``PrecisionPolicy.vectors``) so the
+        mirror never touches jnp — see :meth:`_host_index`."""
+        if self._tabs_np is None:
+            n = self.n_layers
+
+            def expand(tab):
+                return [int(tab[i]) if i < len(tab) else int(tab[-1])
+                        for i in range(n)]
+
+            ws, as_ = [], []
+            for k in self.controller.order():
+                p = self.controller.configs[k]
+                ws.append(expand(p.weight_bits))
+                as_.append(expand(p.act_bits))
+            self._tabs_np = (np.asarray(ws, np.int32),
+                             np.asarray(as_, np.int32))
+        return self._tabs_np
 
     def host_bits(self, budget: float) -> Tuple[np.ndarray, np.ndarray]:
         """The (wbits, abits) vectors a budget resolves to, as host
         numpy (stacked tables cached) — the prefix-cache precision gate
         runs per admission and must not sync device arrays."""
-        if self._tabs_np is None:
-            wtab, atab = self.controller.stacked_tables()
-            self._tabs_np = (np.asarray(wtab), np.asarray(atab))
+        wtab, atab = self.host_tables()
         i = self._host_index(budget)
-        return self._tabs_np[0][i], self._tabs_np[1][i]
+        return wtab[i], atab[i]
 
     def _config_cost(self, idx: int) -> apm.BitVectorCost:
         """Priced AP cost of the controller's idx-th stacked config."""
         if self._config_costs is None:
             wtab, atab = self.controller.stacked_tables()
             wtab, atab = np.asarray(wtab), np.asarray(atab)
-            self._config_costs = [self.pricer.price(wtab[i], atab[i])
-                                  for i in range(wtab.shape[0])]
+            self._config_costs = [
+                self._planned(self.pricer.price(wtab[i], atab[i]))
+                for i in range(wtab.shape[0])]
         return self._config_costs[idx]
 
     def admission_budget(self, requested: Optional[float] = None,
@@ -220,6 +296,8 @@ class ServeRuntime:
         record.budget_s = eff
         record.ap_cost = cost
         record.mean_wbits = float(np.mean(np.asarray(wv_h, np.float64)))
+        if self.plan is not None:
+            record.plan_replicas = self.plan.mean_replicas
         record.planned_units = units if charge_units is None \
             else charge_units
         record.admitted_tick = self._tick

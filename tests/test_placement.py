@@ -1,0 +1,351 @@
+"""Cost-driven layer replication + scale-out serving (DESIGN.md §13):
+planner determinism, honest plan pricing, pspec overrides, the
+precision-vs-replication co-decision, draft-bit autotuning, and
+bit-exact replicated execution against a single device."""
+import os
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.apsim import metrics as apm
+from repro.core import policy as pol
+from repro.dist import placement as dpl
+from repro.dist import sharding as shd
+from repro.dist.api import logical_to_mesh
+from repro.models import lm
+from repro.serve import accounting as acct
+from repro.serve.engine import ServeEngine
+
+KEY = jax.random.PRNGKey(4)
+
+INTERP = os.environ.get("REPRO_PALLAS", "").lower() == "interpret"
+heavy = pytest.mark.skipif(INTERP, reason="full-LM engine under interpret "
+                                          "Pallas; pure planner tests cover "
+                                          "the plan math")
+multidev = pytest.mark.skipif(len(jax.devices()) < 2,
+                              reason="needs >= 2 devices "
+                                     "(XLA_FLAGS=--xla_force_host_platform"
+                                     "_device_count=8)")
+
+# synthetic priced entries: slot 2 dominates both latency and weights
+GEMMS = ([(64, 64)], [(64, 64), (64, 32)], [(256, 256)])
+HEAD = (64, 128)
+REP8 = [8, 8, 8]
+
+
+class FakeMesh:
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_full_budget_fully_replicates():
+    plan = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4, head=HEAD)
+    assert plan.replicas == (4, 4, 4, 4)
+    assert plan.fully_replicated and plan.has_head
+    assert plan.mean_replicas == 4.0
+    assert plan.dp == 4 and plan.n_devices == 4
+    assert plan.summary()["fully_replicated"] is True
+
+
+def test_planner_deterministic_and_budgeted():
+    kw = dict(n_devices=4, head=HEAD, memory_budget=1.5)
+    a = dpl.plan_placement(GEMMS, REP8, REP8, **kw)
+    b = dpl.plan_placement(GEMMS, REP8, REP8, **kw)
+    assert a == b                               # frozen dataclass equality
+    assert not a.fully_replicated
+    # the memory budget is respected: extra copies cost at most half a
+    # model's weights
+    weights = dpl._entry_weights(GEMMS, HEAD)
+    extra = sum((r - 1) * w for r, w in zip(a.replicas, weights))
+    assert extra <= 0.5 * sum(weights) * (1 + 1e-9)
+    # the greedy loop spent SOMETHING (half a model copy funds at least
+    # one extra copy of a non-dominant entry) and stayed within [1, D]
+    assert a.replicated_entries
+    assert 1.0 < a.mean_replicas < 4.0
+
+
+def test_planner_validation():
+    with pytest.raises(ValueError):
+        dpl.plan_placement(GEMMS, REP8, REP8, n_devices=0)
+    with pytest.raises(ValueError):
+        dpl.plan_placement(GEMMS, REP8, REP8, n_devices=2,
+                           memory_budget=0.5)
+    with pytest.raises(ValueError):
+        dpl.PlacementPlan(n_devices=2, dp=2, replicas=(3,), shares=(1.0,))
+    with pytest.raises(ValueError):
+        dpl.PlacementPlan(n_devices=2, dp=2, replicas=(2, 2), shares=(1, 0),
+                          names=("a",))         # 2 entries, 1 name, no head
+
+
+def test_mesh_device_count():
+    assert dpl.mesh_device_count(None) == 1
+    assert dpl.mesh_device_count(FakeMesh({"data": 2, "model": 4})) == 8
+
+
+# ---------------------------------------------------------------------------
+# honest pricing
+# ---------------------------------------------------------------------------
+
+def test_price_amortizes_latency_not_energy():
+    cost = apm.price_bit_vector(GEMMS, REP8, REP8, head=HEAD)
+    plan = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4, head=HEAD)
+    priced = plan.price(cost)
+    for c, p in zip(cost.per_layer_cycles, priced.per_layer_cycles):
+        assert p == c / 4
+    assert priced.per_layer_energy_j == cost.per_layer_energy_j
+    assert priced.freq_hz == cost.freq_hz
+    assert priced.latency_s == pytest.approx(cost.latency_s / 4, rel=1e-12)
+    assert priced.energy_j == cost.energy_j
+    # a cost with MORE entries than the plan covers is a caller bug
+    short = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4)  # no head
+    with pytest.raises(ValueError):
+        short.price(cost)
+
+
+# ---------------------------------------------------------------------------
+# pspec overrides
+# ---------------------------------------------------------------------------
+
+def test_replicates_lm_keys():
+    full = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4, head=HEAD)
+    assert full.replicates(("layers", "attn", "wq", "q"))
+    assert full.replicates(("emb",)) and full.replicates(("head",))
+    part = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4, head=HEAD,
+                              memory_budget=1.5)
+    # a partial stack cannot replicate (one leading L dim, no per-layer
+    # pspecs) and unknown keys never match
+    assert not part.replicates(("layers", "attn", "wq", "q"))
+    assert not full.replicates(("opt_state", "mu"))
+    assert not full.replicates(())
+
+
+def test_replicates_cnn_names():
+    plan = dpl.PlacementPlan(n_devices=4, dp=4, replicas=(4, 1),
+                             shares=(0.7, 0.3), names=("conv1", "fc"))
+    assert plan.replicates(("conv1", "w"))
+    assert not plan.replicates(("fc", "w"))     # single copy: base rules
+    assert not plan.replicates(("bn1", "scale"))
+
+
+def test_logical_spec_plan_override():
+    full = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4, head=HEAD)
+    part = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4, head=HEAD,
+                              memory_budget=1.5)
+    k = ("layers", "attn", "wq", "q")
+    assert shd._logical_spec(k, 3, plan=full) == (None,) * 3
+    # partial plans keep the base Megatron/FSDP rule bit for bit
+    assert shd._logical_spec(k, 3, plan=part) == shd._logical_spec(k, 3)
+
+
+def test_logical_to_mesh_fallback_warns_once():
+    mesh = FakeMesh({"data": 2})
+    with pytest.warns(RuntimeWarning, match=r"7919"):
+        assert logical_to_mesh(mesh, ("dp",), (7919,)) == P(None)
+    with warnings.catch_warnings():             # second resolve: silent
+        warnings.simplefilter("error")
+        assert logical_to_mesh(mesh, ("dp",), (7919,)) == P(None)
+
+
+# ---------------------------------------------------------------------------
+# co-decision + draft autotuning (pure controller)
+# ---------------------------------------------------------------------------
+
+def test_adopt_plan_co_decision():
+    """Replication makes configs honestly cheaper, so the same budget
+    resolves HIGHER bits after adopt_plan."""
+    ctrl = pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 0.5, "int8": 1.0}, 3, budget_axis="latency")
+    before = int(np.asarray(ctrl.resolve(jnp.float32(0.6))[0])[0])
+    assert before == 4                          # int8 (1.0) does not fit
+    pricer = acct.BitVectorPricer(GEMMS, head=HEAD)
+    plan = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=4, head=HEAD)
+    ctrl.adopt_plan(plan, pricer)
+    assert ctrl.plan_gain == {"int4": pytest.approx(0.25),
+                              "int8": pytest.approx(0.25)}
+    assert ctrl.predicted_latency_s["int8"] == pytest.approx(0.25)
+    after = int(np.asarray(ctrl.resolve(jnp.float32(0.6))[0])[0])
+    assert after == 8                           # 0.25 fits the same budget
+    ctrl.adopt_plan(plan, pricer)               # idempotent re-adoption
+    assert ctrl.predicted_latency_s["int8"] == pytest.approx(0.25)
+    other = dpl.plan_placement(GEMMS, REP8, REP8, n_devices=2, head=HEAD)
+    with pytest.raises(ValueError):
+        ctrl.adopt_plan(other, pricer)          # re-planning needs a fresh
+                                                # controller
+
+
+def test_draft_autotune_shifts_with_accept_rate():
+    ctrl = pol.FluidController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 0.5, "int8": 1.0}, 2, draft_autotune=True)
+    for _ in range(3):
+        ctrl.observe_accept(0.0)        # rejected drafts -> raise bits
+    assert ctrl.draft_shift == 3
+    assert ctrl.draft_accept_ema == -1.0        # reset after each shift
+    ctrl.observe_accept(1.0)            # perfect drafts -> lower bits
+    assert ctrl.draft_shift == 2
+    for _ in range(20):
+        ctrl.observe_accept(0.0)
+    assert ctrl.draft_shift == 8                # loose clamp
+    off = pol.FluidController(
+        {"int4": pol.fixed(4)}, {"int4": 0.5}, 2)
+    off.observe_accept(0.0)
+    assert off.draft_shift == 0                 # off by default
+
+
+# ---------------------------------------------------------------------------
+# plan-priced ledger (engine, no mesh needed)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = configs.get_smoke("qwen3_4b")
+    params = lm.init_params(cfg, KEY)
+    return cfg, lm.quantize_params(params, cfg), lm.n_bit_slots(cfg)
+
+
+def _ctrl(n):
+    return pol.BudgetController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 1.0, "int8": 2.0}, n)
+
+
+def _engine(served, **kw):
+    cfg, qparams, n = served
+    kw.setdefault("controller", _ctrl(n))
+    return ServeEngine(cfg, qparams, max_len=64, n_slots=4, prefill_len=8,
+                       decode_block=4, seed=0, **kw)
+
+
+PROMPTS = ([3, 1, 4, 1, 5], [2, 7, 1], [6, 2, 8, 1, 8, 2], [9, 9])
+BUDGETS = (10.0, 0.5, 10.0, 0.5)                # int8 / int4 mix
+
+
+def _serve(eng):
+    rids = [eng.submit(p, max_new_tokens=5, budget_s=b)
+            for p, b in zip(PROMPTS, BUDGETS)]
+    eng.run()
+    return rids
+
+
+@heavy
+def test_plan_priced_records_match_aggregate(served):
+    """An explicit plan (no mesh) amortizes every record's EDP by exactly
+    1/D (latency /D, energy unchanged) and flows into aggregate()."""
+    cfg, _, n = served
+    plan = dpl.plan_for_controller(
+        _ctrl(n), lm.layer_gemm_dims(cfg), n_devices=4,
+        head=lm.head_gemm_dims(cfg), axis="edp")
+    base_eng = _engine(served)
+    plan_eng = _engine(served, plan=plan)
+    base_rids = _serve(base_eng)
+    plan_rids = _serve(plan_eng)
+    for rb, rp in zip(base_rids, plan_rids):
+        b, p = base_eng.requests[rb], plan_eng.requests[rp]
+        assert p.tokens == b.tokens             # pricing never touches math
+        assert p.ap_latency_s == pytest.approx(b.ap_latency_s / 4,
+                                               rel=1e-12)
+        assert p.ap_energy_j == b.ap_energy_j
+        assert p.edp == pytest.approx(b.edp / 4, rel=1e-12)
+        assert p.plan_replicas == 4.0 and b.plan_replicas == 0.0
+    agg = acct.aggregate(plan_eng.requests.values())
+    assert agg["plan_requests"] == len(plan_rids)
+    assert agg["plan_mean_replicas"] == 4.0
+    base_agg = acct.aggregate(base_eng.requests.values())
+    assert base_agg["plan_requests"] == 0
+    assert agg["edp_per_unit_js"] == pytest.approx(
+        base_agg["edp_per_unit_js"] / 4, rel=1e-9)
+
+
+@heavy
+def test_draft_autotune_closed_loop_engine(served):
+    """Autotuned draft bits keep the greedy stream exact while the
+    ledger reports the drafted precision."""
+    cfg, qparams, n = served
+    vanilla = _engine(served)
+    v_rids = _serve(vanilla)
+    fluid = pol.FluidController(
+        {"int4": pol.fixed(4), "int8": pol.fixed(8)},
+        {"int4": 1.0, "int8": 2.0}, n, draft_autotune=True)
+    eng = _engine(served, controller=fluid, spec_k=4, draft_budget_s=1.0)
+    rids = _serve(eng)
+    for rv, rs in zip(v_rids, rids):
+        assert eng.requests[rs].tokens == vanilla.requests[rv].tokens
+    spec = [r for r in eng.requests.values() if r.spec_rounds > 0]
+    assert spec                                 # speculation actually ran
+    assert all(r.draft_wbits > 0 for r in spec)
+    agg = acct.aggregate(eng.requests.values())
+    assert agg["spec_draft_mean_wbits"] > 0
+    # the engine clamps the controller's shift into its config range
+    fluid.draft_shift = 99
+    assert eng._draft_index() == len(fluid.order()) - 1
+    fluid.draft_shift = -99
+    assert eng._draft_index() == 0
+
+
+# ---------------------------------------------------------------------------
+# replicated execution: bit-exact vs single device
+# ---------------------------------------------------------------------------
+
+@heavy
+@multidev
+def test_lm_replicated_rows_bit_exact(served):
+    """A fully-replicated auto plan on a data mesh serves the exact
+    greedy streams of the single-device engine — per-row budgets and
+    all — with zero retraces."""
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:2]), ("data",))
+    eng_m = _engine(served, mesh=mesh, plan="auto")
+    assert eng_m.plan is not None and eng_m.plan.fully_replicated
+    assert eng_m.plan.dp == 2
+    assert eng_m._dp_exec is not None           # shard_map path engaged
+    eng_s = _engine(served)
+    rids_m = _serve(eng_m)
+    rids_s = _serve(eng_s)
+    for rm, rs in zip(rids_m, rids_s):
+        assert eng_m.requests[rm].tokens == eng_s.requests[rs].tokens
+        assert eng_m.requests[rm].plan_replicas == 2.0
+    assert eng_m.stats.prefill_traces == 1
+    assert eng_m.stats.decode_traces == 1
+    agg = acct.aggregate(eng_m.requests.values())
+    assert agg["plan_requests"] == len(rids_m)
+    assert agg["plan_mean_replicas"] == 2.0
+
+
+@heavy
+@multidev
+def test_cnn_replicated_batch_matches_single_device():
+    from jax.sharding import Mesh
+
+    from repro.models import cnn
+    from repro.serve.cnn import CNNServeEngine
+
+    params, layers = cnn.init_cnn("resnet18", KEY, image=8)
+    images = np.asarray(jax.random.normal(KEY, (4, 8, 8, 3), jnp.float32))
+    mesh = Mesh(np.asarray(jax.devices()[:2]), ("data",))
+    eng_m = CNNServeEngine(params, layers, max_batch=4, mesh=mesh,
+                           plan="auto")
+    assert eng_m.plan is not None and eng_m.plan.fully_replicated
+    assert eng_m.plan.names                     # per-layer CNN entries
+    assert eng_m._dp_exec is not None
+    eng_s = CNNServeEngine(params, layers, max_batch=4)
+    got_m, stats_m = eng_m.serve(images)
+    got_s, stats_s = eng_s.serve(images)
+    np.testing.assert_allclose(got_m, got_s, rtol=1e-5, atol=1e-5)
+    assert np.argmax(got_m, -1).tolist() == np.argmax(got_s, -1).tolist()
+    for sm, ss in zip(stats_m, stats_s):
+        assert sm.plan_replicas == 2.0 and ss.plan_replicas == 0.0
+        assert sm.ap_cost.latency_s == pytest.approx(
+            ss.ap_cost.latency_s / 2, rel=1e-12)
+    assert eng_m.stats.forward_traces == 1
